@@ -1,0 +1,103 @@
+"""Shared benchmark pipeline: cached source-device pretraining + tuning runs.
+
+Scaling note: the paper tunes with 200 (small) / 20000-5000 (large) trials on
+search spaces of 1e6..1e9 schedules. Our TPU config space is ~2e4 per task, so
+we scale trial budgets to keep coverage comparable: small=48, large=160 by
+default; --full restores 200/2000. All knobs live in configs/moses.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.autotune.dataset import generate_records, training_task_pool
+from repro.autotune.tasks import PAPER_DNN_NAMES, paper_dnn_tasks
+from repro.autotune.tuner import TuneResult, tune
+from repro.configs.moses import DEFAULT as MCFG
+from repro.core.cost_model import (Records, init_mlp_params,
+                                   train_cost_model)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+CACHE = os.path.join(ART, "bench_cache")
+
+SMALL_TRIALS = 32
+LARGE_TRIALS = 64
+TARGET_DEVICES = {"2060": "tpu_v5e", "TX2": "tpu_edge"}  # paper role -> sim
+DNNS = list(PAPER_DNN_NAMES)
+STRATS = ("raw", "ansor-random", "tenset-pretrain", "tenset-finetune",
+          "moses")
+
+
+def pretrained_cost_model(seed: int = 0):
+    """Cached: source-device (tpu_v5p, plays K80) dataset + pretrained MLP."""
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"pretrained_{seed}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    pool = training_task_pool(include_archs=False)
+    src = generate_records(pool, MCFG.source_device, programs_per_task=24,
+                           seed=seed)
+    params = init_mlp_params(MCFG.cost_model, jax.random.PRNGKey(seed))
+    params, losses = train_cost_model(params, src, MCFG.cost_model, epochs=10)
+    params = jax.device_get(params)
+    blob = {"params": params, "source_records": src,
+            "pretrain_losses": losses}
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+    return blob
+
+
+def run_matrix(dnns=DNNS, devices=TARGET_DEVICES, strategies=STRATS,
+               trials: int = SMALL_TRIALS, seed: int = 1,
+               cache_tag: Optional[str] = None,
+               ratio_override: Optional[float] = None
+               ) -> Dict[str, Dict[str, TuneResult]]:
+    """results[f'{dnn}|{device_role}'][strategy] -> TuneResult (cached)."""
+    tag = cache_tag or f"matrix_t{trials}_s{seed}_r{ratio_override}"
+    path = os.path.join(CACHE, tag + ".pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    blob = pretrained_cost_model()
+    out: Dict[str, Dict[str, TuneResult]] = {}
+    for dnn in dnns:
+        tasks = paper_dnn_tasks(dnn)
+        for role, device in devices.items():
+            key = f"{dnn}|{role}"
+            out[key] = {}
+            for strat in strategies:
+                t0 = time.time()
+                out[key][strat] = tune(
+                    tasks, device, strat, MCFG, trials_per_task=trials,
+                    pretrained_params=blob["params"],
+                    source_pool=blob["source_records"], seed=seed,
+                    ratio_override=(ratio_override if strat == "moses"
+                                    else None))
+                print(f"  [{key}] {strat}: {time.time()-t0:.1f}s wall",
+                      flush=True)
+    os.makedirs(CACHE, exist_ok=True)
+    with open(path, "wb") as f:
+        pickle.dump(out, f)
+    return out
+
+
+def emit(rows: List[dict], csv_name: str):
+    """Write rows to artifacts/ and print the required CSV to stdout."""
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, csv_name)
+    if rows:
+        keys = list(rows[0].keys())
+        with open(path, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for r in rows:
+                f.write(",".join(str(r[k]) for k in keys) + "\n")
+    for r in rows:
+        print(f"{r.get('name')},{r.get('us_per_call')},{r.get('derived')}")
+    return path

@@ -1,0 +1,64 @@
+"""Beyond-paper extension: cross-subgraph (cross-task) knowledge transfer —
+the paper's stated future work ("extending Moses to support knowledge
+transfer from the cross-subgraph tensor optimization perspective").
+
+Mechanism (autotune/tuner.py, cross_task=True): after each task finishes, its
+top-4 configs are archived with a workload descriptor (kind + log dims); a
+new task warm-starts its first evolutionary round with the nearest archived
+task's configs, snapped into its own knob space.
+
+Metric: early-trajectory quality — the mean best-so-far throughput after the
+FIRST measurement batch per task (where warm-starting can matter), plus final
+end-to-end latency, Moses with vs without cross-task transfer.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SMALL_TRIALS, emit, pretrained_cost_model
+from repro.autotune.tasks import paper_dnn_tasks
+from repro.autotune.tuner import tune
+from repro.configs.moses import DEFAULT as MCFG
+
+
+def _early_quality(result, k: int = 8) -> float:
+    """Mean (best-so-far@k / final-best) over tasks: 1.0 = found the final
+    best within the first k measurements."""
+    vals = []
+    for t in result.tasks:
+        if len(t.trajectory) >= 1:
+            final = t.trajectory[-1]
+            at_k = t.trajectory[min(k, len(t.trajectory)) - 1]
+            vals.append(at_k / max(final, 1e-12))
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def main(trials: int = SMALL_TRIALS, device: str = "tpu_edge"):
+    blob = pretrained_cost_model()
+    rows = []
+    for dnn in ("squeezenet", "resnet18"):  # many similar conv subgraphs
+        tasks = paper_dnn_tasks(dnn)
+        base = tune(tasks, device, "moses", MCFG, trials_per_task=trials,
+                    pretrained_params=blob["params"],
+                    source_pool=blob["source_records"], seed=11)
+        xfer = tune(tasks, device, "moses", MCFG, trials_per_task=trials,
+                    pretrained_params=blob["params"],
+                    source_pool=blob["source_records"], seed=11,
+                    cross_task=True)
+        eq_b, eq_x = _early_quality(base), _early_quality(xfer)
+        rows.append({
+            "name": f"crosstask/{dnn}/{device}",
+            "us_per_call": f"{xfer.model_latency * 1e6:.1f}",
+            "derived": (f"early_quality@8 base={eq_b:.3f} xfer={eq_x:.3f}"
+                        f";latency_gain={base.model_latency / xfer.model_latency:.3f}"
+                        f";search_gain={base.total_search_seconds / max(xfer.total_search_seconds, 1e-9):.3f}"),
+        })
+        print(f"# crosstask {dnn}: early-quality {eq_b:.3f} -> {eq_x:.3f}, "
+              f"latency x{base.model_latency / xfer.model_latency:.3f}, "
+              f"search x{base.total_search_seconds / max(xfer.total_search_seconds, 1e-9):.3f}")
+    emit(rows, "crosstask.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""§4.1 reproduction: the embedded-device tensor-program dataset.
+
+The paper contributes a dataset for two embedded devices (TX2, Xavier) with
+>10M records from 50+ DNN models. We generate the analogue for our simulated
+embedded devices (tpu_edge plays TX2; tpu_v5e the second target) over the
+full task pool (paper DNNs + all 10 assigned architectures) and report stats.
+Record counts are scaled by --programs-per-task (default keeps CI fast)."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import ART, emit
+from repro.autotune.dataset import (generate_records, save_records,
+                                    training_task_pool)
+
+DEVICES = ("tpu_edge", "tpu_v5e")
+
+
+def main(programs_per_task: int = 48):
+    pool = training_task_pool(include_archs=True)
+    rows = []
+    for device in DEVICES:
+        t0 = time.time()
+        rec = generate_records(pool, device, programs_per_task, seed=0)
+        dt = time.time() - t0
+        path = os.path.join(ART, f"dataset_{device}.npz")
+        save_records(rec, path)
+        rows.append({
+            "name": f"dataset/{device}",
+            "us_per_call": f"{dt / max(len(rec), 1) * 1e6:.1f}",
+            "derived": f"records={len(rec)};tasks={len(pool)}"
+                       f";file={os.path.basename(path)}",
+        })
+    emit(rows, "dataset_stats.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    ppt = int(sys.argv[1]) if len(sys.argv) > 1 else 48
+    main(ppt)

@@ -1,0 +1,34 @@
+"""Fig. 4 reproduction: end-to-end DNN inference latency reduction GAIN of
+each strategy over the domain-adaptation baselines, per DNN x target device
+(K80 -> 2060 and K80 -> TX2 in paper terms; tpu_v5p -> tpu_v5e / tpu_edge
+here)."""
+from __future__ import annotations
+
+from benchmarks.common import DNNS, SMALL_TRIALS, emit, run_matrix
+from repro.core.metrics import latency_gain
+
+
+def main(trials: int = SMALL_TRIALS):
+    results = run_matrix(trials=trials)
+    rows = []
+    for key, per_strat in results.items():
+        ref = per_strat["tenset-finetune"]
+        for strat, r in per_strat.items():
+            rows.append({
+                "name": f"fig4/{key}/{strat}",
+                "us_per_call": f"{r.model_latency * 1e6:.1f}",
+                "derived": f"latency_gain_vs_finetune="
+                           f"{latency_gain(ref.model_latency, r.model_latency):.3f}",
+            })
+    emit(rows, "fig4_inference_gain.csv")
+    # headline check mirrors the paper's claim direction
+    moses_gains = [latency_gain(per["tenset-finetune"].model_latency,
+                                per["moses"].model_latency)
+                   for per in results.values()]
+    print(f"# fig4: moses latency gain vs finetune: "
+          f"min={min(moses_gains):.3f} max={max(moses_gains):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

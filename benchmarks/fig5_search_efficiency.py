@@ -1,0 +1,36 @@
+"""Fig. 5 reproduction: auto-tuning search-efficiency GAIN comparisons over
+the domain-adaptation baselines (search time dominated by simulated on-device
+measurement cost, as in the paper's breakdown)."""
+from __future__ import annotations
+
+from benchmarks.common import SMALL_TRIALS, emit, run_matrix
+from repro.core.metrics import search_efficiency_gain
+
+
+def main(trials: int = SMALL_TRIALS):
+    results = run_matrix(trials=trials)
+    rows = []
+    for key, per_strat in results.items():
+        ref = per_strat["tenset-finetune"]
+        for strat, r in per_strat.items():
+            if strat == "raw":
+                continue  # raw does no search; excluded as in the paper
+            gain = search_efficiency_gain(ref.total_search_seconds,
+                                          r.total_search_seconds)
+            rows.append({
+                "name": f"fig5/{key}/{strat}",
+                "us_per_call": f"{r.total_search_seconds * 1e6:.0f}",
+                "derived": f"search_gain_vs_finetune={gain:.3f}"
+                           f";measurements={r.total_measurements}",
+            })
+    emit(rows, "fig5_search_efficiency.csv")
+    moses_gains = [search_efficiency_gain(
+        per["tenset-finetune"].total_search_seconds,
+        per["moses"].total_search_seconds) for per in results.values()]
+    print(f"# fig5: moses search gain vs finetune: "
+          f"min={min(moses_gains):.3f} max={max(moses_gains):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

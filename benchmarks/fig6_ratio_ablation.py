@@ -1,0 +1,45 @@
+"""Fig. 6 reproduction: Moses performance across transferable-parameter
+ratios {0.01, 0.3, 0.5, 0.7}. The paper finds the optimum around 0.5 and low
+sensitivity within [0.3, 0.7]; ratio=0.01 (yellow box) degrades."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SMALL_TRIALS, emit, run_matrix
+
+RATIOS = (0.01, 0.3, 0.5, 0.7)
+
+
+def main(trials: int = SMALL_TRIALS):
+    rows = []
+    per_ratio = {}
+    for ratio in RATIOS:
+        results = run_matrix(
+            dnns=("squeezenet", "bert-base"),
+            devices={"TX2": "tpu_edge"},  # the far-transfer target (Fig. 6)
+            strategies=("tenset-finetune", "moses"),
+            trials=trials, ratio_override=ratio,
+            cache_tag=f"fig6_r{ratio}_t{trials}")
+        lats = []
+        for key, per_strat in results.items():
+            mo = per_strat["moses"]
+            ref = per_strat["tenset-finetune"]
+            lats.append(ref.model_latency / mo.model_latency)
+            rows.append({
+                "name": f"fig6/ratio_{ratio}/{key}",
+                "us_per_call": f"{mo.model_latency * 1e6:.1f}",
+                "derived": f"latency_gain_vs_finetune="
+                           f"{ref.model_latency / mo.model_latency:.3f}",
+            })
+        per_ratio[ratio] = float(np.mean(lats))
+    emit(rows, "fig6_ratio_ablation.csv")
+    mid = [per_ratio[r] for r in (0.3, 0.5, 0.7)]
+    print(f"# fig6: mean latency gain per ratio: "
+          + " ".join(f"{r}:{g:.3f}" for r, g in per_ratio.items()))
+    print(f"# fig6: std over ratios 0.3-0.7 = {np.std(mid):.4f} "
+          f"(paper: insensitive in this range)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""§Roofline: assemble the per-(arch x shape x mesh) roofline table from the
+dry-run artifacts (launch/dryrun.py must have run first)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART, emit
+
+DRYRUN = os.path.join(ART, "dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    rows = []
+    table_lines = []
+    for rec in load_records():
+        opt = rec.get("opt", "none")
+        suffix = "" if opt in ("none", "", None) else f"/opt-{opt}"
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}{suffix}"
+        if rec.get("status") == "skip":
+            rows.append({"name": name, "us_per_call": "",
+                         "derived": f"SKIP:{rec['reason'][:60]}"})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"name": name, "us_per_call": "",
+                         "derived": f"ERROR:{rec.get('error', '')[:80]}"})
+            continue
+        # prefer the depth-extrapolated (scan-corrected) calibration when
+        # present; raw scanned-artifact numbers undercount while bodies
+        r = rec.get("calibrated", rec)["roofline"]
+        rows.append({
+            "name": name,
+            "us_per_call": f"{r['step_time_bound_s'] * 1e6:.1f}",
+            "derived": (
+                f"dominant={r['dominant']}"
+                f";compute_s={r['compute_s']:.4g}"
+                f";memory_s={r['memory_s']:.4g}"
+                f";collective_s={r['collective_s']:.4g}"
+                f";useful_flops_frac={r['useful_flops_fraction']:.3f}"
+                f";roofline_frac={r['roofline_fraction']:.3f}"),
+        })
+        table_lines.append(
+            f"| {rec['arch']}{suffix.replace('/', ' ')} | {rec['shape']} "
+            f"| {rec['mesh'].split('_')[0]} "
+            f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | {r['dominant']} "
+            f"| {r['useful_flops_fraction']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    emit(rows, "roofline_table.csv")
+    md = os.path.join(ART, "roofline_table.md")
+    with open(md, "w") as f:
+        f.write("| arch | shape | mesh | compute_s | memory_s | collective_s "
+                "| dominant | useful_flops | roofline_frac |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|\n")
+        f.write("\n".join(table_lines) + "\n")
+    print(f"# roofline markdown -> {md}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,table1,...] [--full]
+
+Benchmarks (one per paper table/figure + system-level extras):
+  fig4     end-to-end inference latency gains          (paper Fig. 4)
+  fig5     auto-tuning search-efficiency gains         (paper Fig. 5)
+  table1   CMAT, small & large trial budgets           (paper Table 1)
+  fig6     transferable-ratio ablation                 (paper Fig. 6)
+  kernels  tuned-vs-default Pallas kernel configs
+  dataset  embedded-device dataset generation          (paper §4.1)
+  roofline per-(arch x shape x mesh) roofline table    (§Roofline; needs
+           artifacts/dryrun from repro.launch.dryrun)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trial budgets (slow)")
+    args = ap.parse_args()
+
+    from benchmarks import (crosstask, dataset_stats, fig4_inference_gain,
+                            fig5_search_efficiency, fig6_ratio_ablation,
+                            kernels_bench, roofline_table, table1_cmat)
+    from benchmarks.common import LARGE_TRIALS, SMALL_TRIALS
+
+    small = 200 if args.full else SMALL_TRIALS
+    large = 2000 if args.full else LARGE_TRIALS
+
+    benches = {
+        "fig4": lambda: fig4_inference_gain.main(trials=small),
+        "fig5": lambda: fig5_search_efficiency.main(trials=small),
+        "table1": lambda: table1_cmat.main(small=small, large=large),
+        "fig6": lambda: fig6_ratio_ablation.main(trials=small),
+        "kernels": lambda: kernels_bench.main(trials=small),
+        "dataset": lambda: dataset_stats.main(24 if not args.full else 96),
+        "crosstask": lambda: crosstask.main(trials=small),
+        "roofline": roofline_table.main,
+    }
+    picked = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failures = []
+    for name in picked:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            benches[name]()
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

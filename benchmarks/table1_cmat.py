@@ -1,0 +1,44 @@
+"""Table 1 reproduction: CMAT under small and large trial budgets.
+
+Paper: small=200, large=20000 (2060) / 5000 (TX2), on search spaces of
+1e6..1e9. Our space is ~2e4/task so the default budgets are scaled
+(common.SMALL_TRIALS / LARGE_TRIALS); pass --full for the paper's numbers.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import (DNNS, LARGE_TRIALS, SMALL_TRIALS, emit,
+                               run_matrix)
+from repro.core.metrics import cmat, latency_gain, search_efficiency_gain
+
+DNN_SHORT = {"squeezenet": "S", "resnet18": "R", "mobilenet": "M",
+             "bert-base": "B"}
+
+
+def main(small: int = SMALL_TRIALS, large: int = LARGE_TRIALS):
+    rows = []
+    for label, trials in (("small", small), ("large", large)):
+        results = run_matrix(trials=trials)
+        for key, per_strat in results.items():
+            dnn, role = key.split("|")
+            ref = per_strat["tenset-finetune"]
+            mo = per_strat["moses"]
+            sg = search_efficiency_gain(ref.total_search_seconds,
+                                        mo.total_search_seconds)
+            lg = latency_gain(ref.model_latency, mo.model_latency)
+            score = cmat(sg, lg)
+            rows.append({
+                "name": f"table1/{label}/{role}-{DNN_SHORT[dnn]}",
+                "us_per_call": f"{mo.model_latency * 1e6:.1f}",
+                "derived": f"CMAT={score:.1f}%;search_gain={sg:.3f}"
+                           f";latency_gain={lg:.3f}",
+            })
+    emit(rows, "table1_cmat.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    full = "--full" in sys.argv
+    main(small=200 if full else SMALL_TRIALS,
+         large=2000 if full else LARGE_TRIALS)

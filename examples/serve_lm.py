@@ -1,0 +1,61 @@
+"""Batched serving example: prefill + KV-cache decode through the Engine
+(continuous-batching-lite), on the reduced RecurrentGemma config — a hybrid
+arch exercising both the local-attention ring cache and the RG-LRU state.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 6 --max-new 12
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serve import Engine, Request  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.7)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    engine = Engine(model, params, mesh,
+                    max_len=args.prompt_len + args.max_new + 8,
+                    batch_slots=4, seed=0)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size,
+                                       size=rng.randint(8, args.prompt_len + 1)
+                                       ).astype(np.int32),
+                    max_new_tokens=args.max_new,
+                    temperature=(0.0 if i % 2 == 0 else args.temperature))
+            for i in range(args.requests)]
+    t0 = time.time()
+    engine.generate(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} requests ({n_tok} tokens) in {dt:.2f}s -> "
+          f"{n_tok / dt:.1f} tok/s on CPU")
+    for i, r in enumerate(reqs):
+        mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
+        print(f"  req{i} ({mode}, prompt {len(r.prompt)} toks): "
+              f"{r.out_tokens}")
+    assert all(r.done for r in reqs)
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

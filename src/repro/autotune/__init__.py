@@ -1,0 +1,5 @@
+from repro.autotune import (dataset, devices, evolution, registry, space,
+                            tasks, tuner)
+
+__all__ = ["dataset", "devices", "evolution", "registry", "space", "tasks",
+           "tuner"]

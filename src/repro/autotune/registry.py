@@ -1,0 +1,58 @@
+"""Tuned-config registry: best (workload -> config) per device.
+
+The bridge between Moses and the real kernels: launch/train.py --autotune
+runs Moses for the target device and persists results here;
+kernels/ops.py consults the registry to pick Pallas BlockSpecs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional
+
+from repro.autotune.space import ProgramConfig, Workload, default_config
+
+_DEFAULT_PATH = os.environ.get("REPRO_TUNING_REGISTRY",
+                               os.path.join(os.path.dirname(__file__),
+                                            "..", "..", "..",
+                                            "tuned_configs.json"))
+_LOCK = threading.Lock()
+
+
+class Registry:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or _DEFAULT_PATH
+        self._data: Dict[str, Dict[str, dict]] = {}
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                self._data = json.load(f)
+
+    def put(self, device: str, wl: Workload, cfg: ProgramConfig,
+            throughput: float):
+        with _LOCK:
+            dev = self._data.setdefault(device, {})
+            dev[wl.key()] = {"knobs": dict(cfg.knobs),
+                             "throughput_gflops": throughput}
+
+    def get(self, device: str, wl: Workload) -> ProgramConfig:
+        entry = self._data.get(device, {}).get(wl.key())
+        if entry is None:
+            return default_config(wl)
+        return ProgramConfig(tuple(sorted(
+            (k, int(v)) for k, v in entry["knobs"].items())))
+
+    def save(self):
+        with _LOCK:
+            os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                        exist_ok=True)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self._data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+
+    def ingest(self, result) -> None:
+        """Ingest a TuneResult."""
+        for t in result.tasks:
+            self.put(result.device, t.workload, t.best_config,
+                     t.best_throughput)

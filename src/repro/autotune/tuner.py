@@ -1,0 +1,232 @@
+"""The auto-tuning loop (paper Fig. 2 pipeline + §3.6) and all baselines.
+
+Strategies (paper §4.4):
+  raw             : vendor-default config, no tuning (baseline 1)
+  ansor-random    : randomly-initialized cost model trained online from
+                    target measurements only (baseline 2)
+  tenset-pretrain : source-pretrained model, frozen (baseline 3)
+  tenset-finetune : source-pretrained model + vanilla full fine-tune (4)
+  moses           : lottery-ticket adaptation + adversarial invariant loss +
+                    AC-scheduled measurement early termination (ours)
+
+Search-time accounting mirrors the paper: on-device measurement dominates, so
+search_time = sum(measurement_seconds) + small per-round model-update cost.
+The AC module (moses only) truncates the measurement phase when the cost
+model's CV stabilizes.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.autotune import devices as dev_mod
+from repro.autotune.evolution import evolutionary_search
+from repro.autotune.space import (ProgramConfig, Workload, default_config,
+                                  random_config)
+from repro.configs.moses import MosesConfig
+from repro.core.ac import ACState, AdaptiveController
+from repro.core.adaptation import MosesAdapter
+from repro.core.cost_model import (Records, init_mlp_params, normalize_per_task,
+                                   predict, train_cost_model)
+from repro.core.features import extract_features
+
+STRATEGIES = ("raw", "ansor-random", "tenset-pretrain", "tenset-finetune",
+              "moses")
+
+
+@dataclasses.dataclass
+class TaskResult:
+    workload: Workload
+    best_config: ProgramConfig
+    best_throughput: float          # GFLOP/s (noiseless eval)
+    best_latency: float             # seconds per call (noiseless)
+    measurements: int
+    search_seconds: float
+    trajectory: List[float]         # best-so-far throughput per measurement
+
+
+@dataclasses.dataclass
+class TuneResult:
+    strategy: str
+    device: str
+    tasks: List[TaskResult]
+    total_search_seconds: float
+
+    @property
+    def model_latency(self) -> float:
+        """End-to-end latency: sum over subgraphs of best latency x count."""
+        return sum(t.best_latency * t.workload.count for t in self.tasks)
+
+    @property
+    def total_measurements(self) -> int:
+        return sum(t.measurements for t in self.tasks)
+
+
+def _noiseless_latency(wl: Workload, cfg: ProgramConfig, device: str) -> float:
+    return dev_mod.execution_time(wl, cfg, dev_mod.DEVICES[device],
+                                  noisy=False)
+
+
+def tune(
+    tasks: Sequence[Workload],
+    device: str,
+    strategy: str,
+    moses_cfg: MosesConfig,
+    trials_per_task: int = 200,
+    pretrained_params=None,
+    source_pool: Optional[Records] = None,
+    seed: int = 0,
+    ratio_override: Optional[float] = None,
+    model_update_cost: float = 2.0,
+    cross_task: bool = False,
+) -> TuneResult:
+    assert strategy in STRATEGIES, strategy
+    rng = np.random.RandomState(seed)
+    cm_cfg = moses_cfg.cost_model
+
+    # --- cost model initialization per strategy
+    params = None
+    adapter = None
+    if strategy == "ansor-random":
+        params = init_mlp_params(cm_cfg, jax.random.PRNGKey(seed))
+    elif strategy in ("tenset-pretrain", "tenset-finetune"):
+        assert pretrained_params is not None
+        params = copy.deepcopy(pretrained_params)
+    elif strategy == "moses":
+        assert pretrained_params is not None
+        adapter = MosesAdapter(cfg=moses_cfg,
+                               params=copy.deepcopy(pretrained_params),
+                               source_pool=source_pool,
+                               ratio_override=ratio_override)
+        params = adapter.params
+
+    ac = AdaptiveController(moses_cfg.ac_train_ratio, moses_cfg.ac_num_batches,
+                            moses_cfg.ac_cv_threshold)
+
+    task_results: List[TaskResult] = []
+    total_search = 0.0
+    # cross-task transfer archive (paper's stated future work; see
+    # benchmarks/crosstask.py): (descriptor, best configs) of finished tasks
+    archive: List = []
+
+    for gid, wl in enumerate(tasks):
+        seen: set = set()
+        measured: List[Tuple[ProgramConfig, float]] = []
+        traj: List[float] = []
+        search_s = 0.0
+
+        if strategy == "raw":
+            cfg = default_config(wl)
+            lat = _noiseless_latency(wl, cfg, device)
+            task_results.append(TaskResult(wl, cfg, wl.flops / lat / 1e9, lat,
+                                           0, 0.0, []))
+            continue
+
+        def score_fn(feats: np.ndarray) -> np.ndarray:
+            if params is None:
+                return rng.rand(len(feats))
+            return predict(params, feats)
+
+        # measurement plan
+        if strategy == "moses":
+            batch_sizes, n_pred = ac.plan(trials_per_task)
+            ac_state = ACState()
+        else:
+            per_round = moses_cfg.top_k_measure
+            n_meas = trials_per_task
+            batch_sizes = [per_round] * max(1, n_meas // per_round)
+            n_pred = 0
+
+        warm_seeds: List[ProgramConfig] = []
+        if cross_task and archive:
+            from repro.autotune.space import (clip_config_to_space,
+                                              workload_descriptor)
+            desc = workload_descriptor(wl)
+            sims = [(float(np.linalg.norm(desc - d)), cfgs)
+                    for d, cfgs in archive]
+            _, best_cfgs = min(sims, key=lambda t: t[0])
+            for c in best_cfgs:
+                cc = clip_config_to_space(wl, c)
+                if cc is not None and cc.knobs not in seen:
+                    warm_seeds.append(cc)
+
+        new_records: List[Records] = []
+
+        for bi, bsz in enumerate(batch_sizes):
+            cands = evolutionary_search(
+                wl, score_fn, rng,
+                population=moses_cfg.population_size,
+                rounds=moses_cfg.evolution_rounds,
+                mutation_prob=moses_cfg.mutation_prob,
+                top_k=bsz, eps_greedy=moses_cfg.eps_greedy, seen=seen,
+                seed_configs=(warm_seeds if (bi == 0 and not measured) else [])
+                + [c for c, _ in sorted(measured, key=lambda t: -t[1])[:8]])
+            if not cands:  # config space exhausted
+                break
+            feats = np.stack([extract_features(wl, c) for c in cands])
+            thr = np.array([dev_mod.measure(wl, c, device, trial=bi)
+                            for c in cands], np.float32)
+            for c, t in zip(cands, thr):
+                measured.append((c, float(t)))
+                best = max(m[1] for m in measured)
+                traj.append(best)
+            search_s += sum(dev_mod.measurement_seconds(wl, c, device)
+                            for c in cands)
+
+            # online model update
+            raw = np.array([t for _, t in measured], np.float32)
+            g = np.zeros(len(raw), np.int32)
+            rec = Records(
+                x=np.stack([extract_features(wl, c) for c, _ in measured]),
+                y=normalize_per_task(raw, g), g=g, raw_throughput=raw)
+            if strategy in ("ansor-random", "tenset-finetune"):
+                params, _ = train_cost_model(params, rec, cm_cfg,
+                                             epochs=moses_cfg.online_epochs,
+                                             seed=seed + bi)
+                search_s += model_update_cost
+            elif strategy == "moses":
+                adapter.adapt(rec, epochs=moses_cfg.online_epochs)
+                params = adapter.params
+                search_s += model_update_cost
+                preds = predict(params, feats)
+                ac_state = ac.update(ac_state, preds)
+                if ac_state.terminated:
+                    # early-terminate hardware measurement; remaining trials
+                    # are pure cost-model predictions (paper §3.5)
+                    n_pred += sum(batch_sizes[bi + 1:])
+                    break
+            # tenset-pretrain never updates
+
+        # prediction-only trials: explore with the (adapted) cost model and
+        # accept its argmax WITHOUT measuring (zero hardware cost)
+        if n_pred > 0 and params is not None:
+            cands = evolutionary_search(
+                wl, score_fn, rng, population=moses_cfg.population_size,
+                rounds=moses_cfg.evolution_rounds, top_k=n_pred, seen=seen)
+            cands = cands or [default_config(wl)]
+            scores = predict(params, np.stack(
+                [extract_features(wl, c) for c in cands]))
+            top = cands[int(np.argmax(scores))]
+            # top-1 predicted config gets one confirmation measurement
+            thr = dev_mod.measure(wl, top, device, trial=97)
+            measured.append((top, float(thr)))
+            traj.append(max(m[1] for m in measured))
+            search_s += dev_mod.measurement_seconds(wl, top, device)
+
+        best_cfg, _ = max(measured, key=lambda t: t[1])
+        lat = _noiseless_latency(wl, best_cfg, device)
+        task_results.append(TaskResult(
+            wl, best_cfg, wl.flops / lat / 1e9, lat,
+            len(measured), search_s, traj))
+        total_search += search_s
+        if cross_task:
+            from repro.autotune.space import workload_descriptor
+            top4 = [c for c, _ in sorted(measured, key=lambda t: -t[1])[:4]]
+            archive.append((workload_descriptor(wl), top4))
+
+    return TuneResult(strategy, device, task_results, total_search)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: lottery-ticket cross-device cost-model
+# adaptation (Moses). Substrates live in sibling subpackages (autotune/,
+# models/, distributed/, train/, serve/, kernels/, launch/).
+from repro.core import ac, adaptation, cost_model, features, lottery, metrics
+
+__all__ = ["ac", "adaptation", "cost_model", "features", "lottery", "metrics"]

@@ -1,0 +1,187 @@
+"""Moses online cost-model adaptation (paper §3.4 + §3.6 Step 4).
+
+Per tuning phase ph:
+  1. grads of the ranking loss on the target records T-hat (+ adversarial
+     invariant term, Eq. 6, weight beta with a gradient-reversal domain
+     discriminator b() on the hidden representation);
+  2. xi = |w * grad_w| (Eq. 5) -> transferable mask (threshold theta or
+     top-rho ranking — Fig. 6 knob);
+  3. invariant parameters: Adam step; variant parameters: weight-decay toward
+     zero (Eq. 7).
+
+The mask is re-estimated every phase ("we iteratively update the boundary of
+domain-invariant parameters ... during each online training epoch").
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.moses import MosesConfig
+from repro.core import lottery
+from repro.core.cost_model import (AdamState, Records, adam_init, mlp_forward,
+                                   pairwise_rank_loss)
+
+PyTree = Any
+
+
+def init_discriminator(rng: jax.Array, hidden_dim: int = 512,
+                       width: int = 64) -> PyTree:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w0": jax.random.normal(k1, (hidden_dim, width)) / np.sqrt(hidden_dim),
+        "b0": jnp.zeros((width,)),
+        "w1": jax.random.normal(k2, (width, 1)) / np.sqrt(width),
+        "b1": jnp.zeros((1,)),
+    }
+
+
+def discriminator_logit(dp: PyTree, h: jax.Array) -> jax.Array:
+    z = jax.nn.relu(h @ dp["w0"] + dp["b0"])
+    return (z @ dp["w1"] + dp["b1"])[..., 0]
+
+
+@jax.custom_vjp
+def grad_reverse(x):
+    return x
+
+
+def _gr_fwd(x):
+    return x, None
+
+
+def _gr_bwd(_, g):
+    return (-g,)
+
+
+grad_reverse.defvjp(_gr_fwd, _gr_bwd)
+
+
+def _adaptation_loss(params, disc, batch_t, batch_s, rng, beta, n_pairs):
+    """Ranking loss on target records + adversarial invariant loss (Eq. 6).
+
+    The discriminator is trained to tell source-hidden from target-hidden;
+    the cost model sees the REVERSED gradient so its surviving (invariant)
+    parameters learn representations the discriminator cannot separate.
+    """
+    scores_t, hidden_t = mlp_forward(params, batch_t["x"], return_hidden=True)
+    rank = pairwise_rank_loss(scores_t, batch_t["y"], batch_t["g"], rng,
+                              n_pairs)
+    adv = jnp.zeros(())
+    if batch_s is not None and beta > 0:
+        _, hidden_s = mlp_forward(params, batch_s["x"], return_hidden=True)
+        # gradient reversal on the featurizer side
+        logit_s = discriminator_logit(disc, grad_reverse(hidden_s))
+        logit_t = discriminator_logit(disc, grad_reverse(hidden_t))
+        # labeling black-box b(): source=1, target=0 (Eq. 6 with entropy
+        # coefficient beta on the target branch)
+        l_s = jnp.mean(jax.nn.softplus(-logit_s))          # -log b(.)
+        l_t = jnp.mean(jax.nn.softplus(logit_t))           # -log(1 - b(.))
+        adv = l_s + beta * l_t
+    return rank + adv, (rank, adv)
+
+
+@partial(jax.jit, static_argnames=("beta", "n_pairs", "use_ratio"))
+def _adapt_phase(params, disc, opt: AdamState, disc_opt: AdamState,
+                 batch_t, batch_s, rng, lr, ratio, theta, variant_decay,
+                 beta, n_pairs, use_ratio):
+    (loss, (rank, adv)), grads = jax.value_and_grad(
+        _adaptation_loss, argnums=(0, 1), has_aux=True)(
+        params, disc, batch_t, batch_s, rng, beta, n_pairs)
+    g_params, g_disc = grads
+
+    # Eq. 5 mask from this phase's gradient flow
+    mask = lottery.transferable_mask(params, g_params, ratio=ratio,
+                                     theta=theta, use_ratio=use_ratio)
+
+    # Adam moments over all params; update applied through the mask
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    count = opt.count + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt.m, g_params)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt.v, g_params)
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+    updates = jax.tree.map(
+        lambda m_, v_: -lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), m, v)
+    new_params = lottery.masked_update(params, updates, mask, variant_decay,
+                                       lr)
+
+    # discriminator trains normally (its own Adam)
+    dcount = disc_opt.count + 1
+    dm = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, disc_opt.m, g_disc)
+    dv = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, disc_opt.v,
+                      g_disc)
+    dbc1 = 1 - b1 ** dcount.astype(jnp.float32)
+    dbc2 = 1 - b2 ** dcount.astype(jnp.float32)
+    new_disc = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / dbc1) / (jnp.sqrt(v_ / dbc2) + eps),
+        disc, dm, dv)
+
+    frac = sum(jnp.sum(m_) for m_ in jax.tree.leaves(mask)) / sum(
+        m_.size for m_ in jax.tree.leaves(mask))
+    return (new_params, new_disc, AdamState(m, v, count),
+            AdamState(dm, dv, dcount), loss, rank, adv, frac)
+
+
+@dataclasses.dataclass
+class MosesAdapter:
+    """Stateful wrapper used inside the tuning loop (one per target device)."""
+    cfg: MosesConfig
+    params: PyTree
+    disc: PyTree = None
+    opt: AdamState = None
+    disc_opt: AdamState = None
+    source_pool: Optional[Records] = None
+    rng: jax.Array = None
+    history: List[dict] = dataclasses.field(default_factory=list)
+    ratio_override: Optional[float] = None
+
+    def __post_init__(self):
+        if self.rng is None:
+            self.rng = jax.random.PRNGKey(self.cfg.seed)
+        if self.disc is None:
+            self.rng, k = jax.random.split(self.rng)
+            self.disc = init_discriminator(k, self.cfg.cost_model.hidden_dims[-1])
+        if self.opt is None:
+            self.opt = adam_init(self.params)
+        if self.disc_opt is None:
+            self.disc_opt = adam_init(self.disc)
+
+    def _source_batch(self, size: int):
+        if self.source_pool is None or len(self.source_pool) == 0:
+            return None
+        rng = np.random.RandomState(len(self.history))
+        idx = rng.randint(0, len(self.source_pool), size=size)
+        return {"x": jnp.asarray(self.source_pool.x[idx]),
+                "y": jnp.asarray(self.source_pool.y[idx]),
+                "g": jnp.asarray(self.source_pool.g[idx])}
+
+    def adapt(self, target_records: Records, epochs: Optional[int] = None):
+        """Run lottery-ticket adaptation phases on the target records."""
+        cfg = self.cfg
+        n_epochs = epochs if epochs is not None else cfg.adaptation_epochs
+        bs = cfg.cost_model.batch_size
+        rng_np = np.random.RandomState(1234 + len(self.history))
+        ratio = (self.ratio_override if self.ratio_override is not None
+                 else cfg.transferable_ratio)
+        for _ in range(n_epochs):
+            for batch_t in target_records.batches(bs, rng_np):
+                self.rng, sub = jax.random.split(self.rng)
+                batch_s = self._source_batch(len(batch_t["x"]))
+                (self.params, self.disc, self.opt, self.disc_opt, loss, rank,
+                 adv, frac) = _adapt_phase(
+                    self.params, self.disc, self.opt, self.disc_opt,
+                    batch_t, batch_s, sub,
+                    cfg.adaptation_lr, ratio, cfg.distill_threshold,
+                    cfg.variant_weight_decay, cfg.adversarial_beta,
+                    cfg.cost_model.rank_pairs_per_batch,
+                    cfg.use_ratio_ranking)
+                self.history.append({
+                    "loss": float(loss), "rank": float(rank),
+                    "adv": float(adv), "mask_frac": float(frac)})
+        return self.params

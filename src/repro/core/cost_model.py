@@ -1,0 +1,207 @@
+"""The cost model C(): MLP with two hidden layers x 512, ranking loss.
+
+Paper §4.2: "the representative one used in Ansor, which is an MLP with two
+hidden layers, with 512 neurons for each. We train the MLP cost model with
+ranking loss". Pure JAX (no flax/optax); Adam implemented locally so the
+lottery-ticket machinery can intercept parameter updates (core/lottery.py,
+core/adaptation.py).
+
+Labels are per-task-normalized throughputs (Ansor convention); the pairwise
+logistic ranking loss compares records within the same task.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.moses import CostModelConfig
+
+PyTree = Any
+
+
+def init_mlp_params(cfg: CostModelConfig, rng: jax.Array) -> PyTree:
+    dims = (cfg.feature_dim, *cfg.hidden_dims, 1)
+    params = {}
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        rng, k = jax.random.split(rng)
+        params[f"w{i}"] = jax.random.normal(k, (din, dout)) * (1.0 / np.sqrt(din))
+        params[f"b{i}"] = jnp.zeros((dout,))
+    return params
+
+
+def mlp_forward(params: PyTree, x: jax.Array,
+                return_hidden: bool = False):
+    """x: [B, F] -> scores [B]. Optionally returns the last hidden layer
+    (used by the adversarial domain discriminator, Eq. 6)."""
+    n_layers = len([k for k in params if k.startswith("w")])
+    h = x
+    hidden = None
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+            hidden = h
+    score = h[..., 0]
+    if return_hidden:
+        return score, hidden
+    return score
+
+
+def pairwise_rank_loss(scores: jax.Array, labels: jax.Array,
+                       group_ids: jax.Array, rng: jax.Array,
+                       n_pairs: int = 2048) -> jax.Array:
+    """Pairwise logistic ranking loss within task groups.
+
+    scores/labels: [B]; group_ids: [B] int (task index of each record).
+    """
+    B = scores.shape[0]
+    k1, k2 = jax.random.split(rng)
+    ii = jax.random.randint(k1, (n_pairs,), 0, B)
+    jj = jax.random.randint(k2, (n_pairs,), 0, B)
+    same = (group_ids[ii] == group_ids[jj]) & (ii != jj)
+    sign = jnp.sign(labels[ii] - labels[jj])
+    margin = (scores[ii] - scores[jj]) * sign
+    per_pair = jax.nn.softplus(-margin)
+    w = same.astype(jnp.float32) * (sign != 0)
+    return (per_pair * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def mse_loss(scores, labels, group_ids=None, rng=None, n_pairs=None):
+    return jnp.mean(jnp.square(scores - labels))
+
+
+def model_loss(params, batch, rng, loss_kind: str = "rank",
+               n_pairs: int = 2048):
+    scores = mlp_forward(params, batch["x"])
+    if loss_kind == "rank":
+        return pairwise_rank_loss(scores, batch["y"], batch["g"], rng, n_pairs)
+    return mse_loss(scores, batch["y"])
+
+
+# ---------------------------------------------------------------------------
+# Dataset containers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Records:
+    """A set of measured program records (the paper's S / T-hat)."""
+    x: np.ndarray           # [N, F] features
+    y: np.ndarray           # [N] per-task-normalized throughput
+    g: np.ndarray           # [N] task group id
+    raw_throughput: Optional[np.ndarray] = None
+
+    def __len__(self):
+        return len(self.x)
+
+    @staticmethod
+    def concat(rs: List["Records"]) -> "Records":
+        rs = [r for r in rs if len(r)]
+        return Records(
+            np.concatenate([r.x for r in rs]),
+            np.concatenate([r.y for r in rs]),
+            np.concatenate([r.g for r in rs]),
+        )
+
+    def batches(self, batch_size: int, rng: np.random.RandomState):
+        idx = rng.permutation(len(self.x))
+        for s in range(0, len(idx), batch_size):
+            sel = idx[s: s + batch_size]
+            yield {"x": jnp.asarray(self.x[sel]),
+                   "y": jnp.asarray(self.y[sel]),
+                   "g": jnp.asarray(self.g[sel])}
+
+
+def normalize_per_task(raw: np.ndarray, groups: np.ndarray) -> np.ndarray:
+    y = np.zeros_like(raw, dtype=np.float32)
+    for g in np.unique(groups):
+        m = groups == g
+        top = raw[m].max()
+        y[m] = raw[m] / max(top, 1e-12)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Plain training (pre-training on the source-device dataset; also the
+# Ansor-Random / Tenset-Finetune baselines' update path)
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    count: jax.Array
+
+
+def adam_init(params: PyTree) -> AdamState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(z, jax.tree.map(jnp.zeros_like, params),
+                     jnp.zeros((), jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))
+def adam_update(grads, state: AdamState, params, lr=1e-3, b1=0.9, b2=0.999,
+                eps=1e-8):
+    count = state.count + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, grads)
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+        params, m, v)
+    return new_params, AdamState(m, v, count)
+
+
+@partial(jax.jit, static_argnames=("loss_kind", "n_pairs"))
+def _loss_and_grad(params, batch, rng, loss_kind, n_pairs):
+    return jax.value_and_grad(model_loss)(params, batch, rng, loss_kind,
+                                          n_pairs)
+
+
+def train_cost_model(params: PyTree, records: Records, cfg: CostModelConfig,
+                     epochs: Optional[int] = None, lr: Optional[float] = None,
+                     seed: int = 0) -> Tuple[PyTree, List[float]]:
+    """Vanilla full-parameter training (pre-training & baseline fine-tuning)."""
+    rng_np = np.random.RandomState(seed)
+    key = jax.random.PRNGKey(seed)
+    opt = adam_init(params)
+    losses = []
+    for ep in range(epochs if epochs is not None else cfg.max_epochs):
+        ep_loss, nb = 0.0, 0
+        for batch in records.batches(cfg.batch_size, rng_np):
+            key, sub = jax.random.split(key)
+            loss, grads = _loss_and_grad(params, batch, sub, cfg.loss,
+                                         cfg.rank_pairs_per_batch)
+            params, opt = adam_update(grads, opt, params,
+                                      lr=lr if lr is not None else cfg.lr)
+            ep_loss += float(loss)
+            nb += 1
+        losses.append(ep_loss / max(nb, 1))
+    return params, losses
+
+
+def predict(params: PyTree, x: np.ndarray) -> np.ndarray:
+    return np.asarray(mlp_forward(params, jnp.asarray(x)))
+
+
+def rank_correlation(params: PyTree, records: Records) -> float:
+    """Mean per-task Spearman-like rank agreement (top-1 regret proxy)."""
+    scores = predict(params, records.x)
+    taus = []
+    for g in np.unique(records.g):
+        m = records.g == g
+        if m.sum() < 3:
+            continue
+        s, y = scores[m], records.y[m]
+        rs = np.argsort(np.argsort(s)).astype(np.float64)
+        ry = np.argsort(np.argsort(y)).astype(np.float64)
+        c = np.corrcoef(rs, ry)[0, 1]
+        if np.isfinite(c):
+            taus.append(c)
+    return float(np.mean(taus)) if taus else 0.0

@@ -1,0 +1,83 @@
+"""Lottery-ticket-based transferable-parameter identification (paper §3.4).
+
+Distilling boundary criterion (Eq. 5):     xi(w) = |w * grad_w|
+Parameters with large xi carry hardware-independent ("winning ticket")
+knowledge and are fine-tuned on the target device; the rest are
+domain-variant and are decayed toward zero (Eq. 7):
+
+    w_v(ph+1) <- w_v(ph) - alpha * wd(w_v(ph))
+
+Two selection modes (both in the paper):
+  - threshold: xi normalized to [0,1] per-model; transferable iff xi > theta
+  - ratio ranking: users set the transferable ratio rho; the top-rho fraction
+    of parameters by xi are transferable (the Fig. 6 ablation knob).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def xi_scores(params: PyTree, grads: PyTree) -> PyTree:
+    """Eq. 5: elementwise |w * grad_w|."""
+    return jax.tree.map(lambda w, g: jnp.abs(w * g), params, grads)
+
+
+def normalize_scores(scores: PyTree) -> PyTree:
+    """Normalize xi to [0, 1] across the whole model (for the theta mode)."""
+    flat = jnp.concatenate([s.reshape(-1) for s in jax.tree.leaves(scores)])
+    lo, hi = flat.min(), flat.max()
+    rng = jnp.maximum(hi - lo, 1e-30)
+    return jax.tree.map(lambda s: (s - lo) / rng, scores)
+
+
+def mask_by_threshold(scores: PyTree, theta: float) -> PyTree:
+    norm = normalize_scores(scores)
+    return jax.tree.map(lambda s: (s > theta).astype(jnp.float32), norm)
+
+
+def mask_by_ratio(scores: PyTree, ratio: float) -> PyTree:
+    """Top-`ratio` fraction of ALL parameters by xi ranking -> mask=1."""
+    flat = jnp.concatenate([s.reshape(-1) for s in jax.tree.leaves(scores)])
+    n = flat.shape[0]
+    k = jnp.clip(jnp.round(ratio * n).astype(jnp.int32), 1, n)
+    # global threshold = k-th largest score
+    thresh = jnp.sort(flat)[n - k]
+    return jax.tree.map(lambda s: (s >= thresh).astype(jnp.float32), scores)
+
+
+def transferable_mask(params: PyTree, grads: PyTree, *, ratio: float = 0.5,
+                      theta: float = 0.5, use_ratio: bool = True) -> PyTree:
+    scores = xi_scores(params, grads)
+    if use_ratio:
+        return mask_by_ratio(scores, ratio)
+    return mask_by_threshold(scores, theta)
+
+
+def mask_fraction(mask: PyTree) -> float:
+    tot = sum(int(np.prod(m.shape)) for m in jax.tree.leaves(mask))
+    on = sum(float(m.sum()) for m in jax.tree.leaves(mask))
+    return on / max(tot, 1)
+
+
+def masked_update(params: PyTree, updates: PyTree, mask: PyTree,
+                  variant_decay: float, lr: float) -> PyTree:
+    """Invariant params take the optimizer update; variant params decay to 0
+    (Eq. 7 with wd(w) = w, i.e. w <- w - alpha*wd_strength*w)."""
+    def one(w, u, m):
+        invariant = w + u  # optimizer already folded the lr into u
+        variant = w * (1.0 - lr * variant_decay)
+        return m * invariant + (1 - m) * variant
+
+    return jax.tree.map(one, params, updates, mask)
+
+
+def prune_variant(params: PyTree, mask: PyTree) -> PyTree:
+    """Hard-prune the domain-variant parameters (winning-ticket extraction,
+    used by the ablation in benchmarks/fig6)."""
+    return jax.tree.map(lambda w, m: w * m, params, mask)

@@ -1,0 +1,121 @@
+"""Activation/weight sharding hints — the beyond-paper perf layer.
+
+Problem (measured in EXPERIMENTS.md §Perf): under the fsdp_tp plan, GSPMD
+may contract einsums over the dp-sharded `embed` weight dim, producing
+ACTIVATION-sized all-reduces per layer (TBs/step at vision-90b scale), and it
+may shard attention's kv-chunk dim arbitrarily, triggering "involuntary full
+rematerialization" copies. The fixes are classical:
+
+  1. ZeRO-3 just-in-time weight gathering: constrain each scanned layer's
+     params to their TP-only sharding INSIDE the scan body, so XLA
+     all-gathers weights (small) instead of psumming activations (huge); the
+     backward transposes into reduce-scatter automatically.
+  2. Explicit activation sharding constraints at block boundaries
+     (batch->dp, heads/mlp->tp), so propagation never invents bad layouts.
+
+Models stay mesh-agnostic: hints live in a context set by the launcher /
+dry-run; with no context every helper is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+class Hints:
+    def __init__(self, mesh: Mesh, dp_axes: Tuple[str, ...],
+                 tp_axis: Optional[str] = "model",
+                 zero3_gather: bool = True,
+                 constrain_activations: bool = True,
+                 moe_expert_parallel: bool = False,
+                 moe_impl: Optional[str] = None):
+        self.mesh = mesh
+        self.dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+        self.tp = tp_axis if (tp_axis in mesh.axis_names) else None
+        self.zero3_gather = zero3_gather
+        self.constrain_activations = constrain_activations
+        self.moe_expert_parallel = moe_expert_parallel
+        self.moe_impl = moe_impl
+
+    def axis_size(self, kind: str) -> int:
+        import numpy as np
+        if kind == "dp":
+            return int(np.prod([self.mesh.shape[a] for a in self.dp])) \
+                if self.dp else 1
+        return self.mesh.shape.get(self.tp, 1) if self.tp else 1
+
+
+def current() -> Optional[Hints]:
+    return getattr(_TLS, "hints", None)
+
+
+@contextlib.contextmanager
+def use_hints(hints: Optional[Hints]):
+    prev = getattr(_TLS, "hints", None)
+    _TLS.hints = hints
+    try:
+        yield
+    finally:
+        _TLS.hints = prev
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """dims: per-dimension 'dp' | 'tp' | None. No-op without hints, or when a
+    dim does not divide the requested axes."""
+    h = current()
+    if h is None or not h.constrain_activations:
+        return x
+    assert len(dims) == x.ndim, (dims, x.shape)
+    entries = []
+    for d, kind in zip(x.shape, dims):
+        if kind is None:
+            entries.append(None)
+            continue
+        if kind == "dp":
+            ax: Any = h.dp if len(h.dp) > 1 else (h.dp[0] if h.dp else None)
+        else:
+            ax = h.tp
+        size = h.axis_size(kind)
+        if ax is None or size <= 1 or d % size != 0:
+            entries.append(None)
+        else:
+            entries.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(h.mesh, P(*entries)))
+
+
+def gather_weight(w: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """ZeRO-3 JIT gather: constrain a (scanned-layer) weight to its TP-only
+    sharding — dp dims dropped — right before use. `axes` are the logical
+    axis names of w's dims."""
+    h = current()
+    if h is None or not h.zero3_gather:
+        return w
+    tp_logical = {"vocab", "mlp", "heads", "experts"}
+    entries = []
+    for d, name in zip(w.shape, axes):
+        if name in tp_logical and h.tp and d % h.mesh.shape[h.tp] == 0:
+            entries.append(h.tp)
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(h.mesh, P(*entries)))
+
+
+def gather_params(tree, axes_tree):
+    """gather_weight over a whole (layer) param subtree."""
+    h = current()
+    if h is None or not h.zero3_gather:
+        return tree
+    from repro.models.common import is_axes_leaf
+    flat_p, treedef = jax.tree.flatten(tree)
+    flat_a = jax.tree.leaves(axes_tree, is_leaf=is_axes_leaf)
+    assert len(flat_p) == len(flat_a)
+    return jax.tree.unflatten(
+        treedef, [gather_weight(p, a) for p, a in zip(flat_p, flat_a)])

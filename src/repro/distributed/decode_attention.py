@@ -1,0 +1,52 @@
+"""Distributed decode attention: KV cache sequence-sharded over the "model"
+mesh axis, flash-decoding-style partial-softmax + LSE combine.
+
+Why: at decode_32k, a GQA cache with kv_heads < model-axis size cannot be
+head-sharded 16-way; replicating it across the model axis costs 16x HBM and
+an all-gather per step. Sharding the cache's *sequence* dim instead keeps
+per-chip memory flat; each shard computes attention over its sequence slice
+for ALL heads (q is tiny and all-gathered), then partials are combined with a
+log-sum-exp reduction (attention.combine_partials).
+
+This is one of the beyond-paper distributed optimizations recorded in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.attention import combine_partials, decode_attend_partial
+from repro.distributed.sharding import data_axes
+
+
+def make_distributed_attend_fn(mesh: Mesh, batch_sharded: bool = True):
+    """Returns attend_fn(q, k_cache, v_cache, kv_positions, cur_pos, window)
+    matching the contract of models.attention.decode_attend, with the cache
+    seq-sharded on the "model" axis via shard_map."""
+    dp = data_axes(mesh)
+    dp_entry = (dp if len(dp) > 1 else dp[0]) if (dp and batch_sharded) else None
+
+    def attend(q, k_cache, v_cache, kv_positions, cur_pos, window=0, scale=None):
+        qspec = P(dp_entry, None, None)          # [B, H, D] replicated on model
+        kvspec = P(dp_entry, "model", None, None)  # [B, Sc, G, D] seq-sharded
+        pspec = P(dp_entry, "model")
+        cspec = P(dp_entry)
+
+        def body(q_, k_, v_, pos_, cur_):
+            o, m, l = decode_attend_partial(q_, k_, v_, pos_, cur_,
+                                            window=window, scale=scale)
+            return combine_partials(o, m, l, "model").astype(q_.dtype)
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(qspec, kvspec, kvspec, pspec, cspec),
+            out_specs=P(dp_entry, None, None),
+            check_vma=False,
+        )(q, k_cache, v_cache, kv_positions, cur_pos)
+
+    return attend

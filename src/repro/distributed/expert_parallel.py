@@ -1,0 +1,127 @@
+"""Expert-parallel MoE via shard_map (the DeepSpeed-MoE / GShard EP pattern).
+
+Baseline ("scatter") lets GSPMD partition a global scatter/gather dispatch —
+measured pathological at 256 experts (EXPERIMENTS.md §Perf: compute replicated
+across the model axis). This path makes the parallelism explicit:
+
+  - tokens stay sharded over the data axes (every model shard sees the same
+    local tokens);
+  - each model shard owns E/tp experts and K-selects ITS tokens for ITS
+    experts with a LOCAL capacity buffer (no global cumsum, no cross-shard
+    scatter);
+  - one psum over the model axis combines expert outputs (each token's top-k
+    experts live on different shards) — the same wire cost as a Megatron
+    row-parallel matmul.
+
+Expert weights may additionally be fsdp-sharded on their embed dim; they are
+all-gathered just-in-time inside the shard (ZeRO-3 semantics).
+
+Capacity note: capacity is per (token-shard, expert): C_loc =
+ceil(T_local * top_k * cf / E) — statistically equivalent to the global
+capacity for shuffled tokens; correctness vs the dense oracle is tested with
+a generous capacity factor.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.common import activation
+
+
+def _local_dispatch_ffn(cfg, xf, weights, idx, wi, wg, wo, shard_id, E_loc,
+                        C_loc):
+    """Per-shard: xf [T_loc, d]; wi/wg/wo local expert weights [E_loc, ...];
+    idx/weights [T_loc, k] global routing. Returns [T_loc, d] partial output
+    (sum over THIS shard's experts only)."""
+    T_loc, d = xf.shape
+    k = idx.shape[1]
+    e0 = shard_id * E_loc
+    local = (idx >= e0) & (idx < e0 + E_loc)          # [T, k]
+    lidx = jnp.clip(idx - e0, 0, E_loc - 1)
+
+    a = lidx.reshape(T_loc * k)
+    valid = local.reshape(T_loc * k)
+    onehot = jax.nn.one_hot(a, E_loc, dtype=jnp.int32) * valid[:, None]
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos_in_e = jnp.take_along_axis(pos, a[:, None], axis=1)[:, 0]
+    keep = valid & (pos_in_e < C_loc)
+    dest = jnp.where(keep, a * C_loc + pos_in_e, E_loc * C_loc)
+
+    x_rep = jnp.repeat(xf, k, axis=0)
+    buf = jnp.zeros((E_loc * C_loc + 1, d), xf.dtype).at[dest].add(
+        x_rep * keep[:, None].astype(xf.dtype))
+    expert_in = buf[: E_loc * C_loc].reshape(E_loc, C_loc, d)
+
+    act = activation(cfg.act)
+    h = jnp.einsum("ecd,edf->ecf", expert_in, wi.astype(xf.dtype))
+    if wg is not None:
+        h = act(h) * jnp.einsum("ecd,edf->ecf", expert_in, wg.astype(xf.dtype))
+    else:
+        h = act(h)
+    out = jnp.einsum("ecf,efd->ecd", h, wo.astype(xf.dtype))
+    out = out.reshape(E_loc * C_loc, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+    gathered = out[dest] * (weights.reshape(T_loc * k, 1).astype(xf.dtype)
+                            * keep[:, None].astype(xf.dtype))
+    return gathered.reshape(T_loc, k, d).sum(axis=1)
+
+
+def moe_forward_expert_parallel(p, cfg, x: jax.Array, hints
+                                ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d]. Requires act_sharding hints (mesh + axes)."""
+    from repro.models.moe import _router, _shared_ffn
+
+    mo = cfg.moe
+    mesh = hints.mesh
+    tp = hints.tp
+    dp = hints.dp
+    E = mo.num_experts
+    tp_size = mesh.shape[tp]
+    assert E % tp_size == 0, (E, tp_size)
+    E_loc = E // tp_size
+
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    weights, idx, aux = _router(p, cfg, xf)
+
+    dp_size = hints.axis_size("dp")
+    T_loc = T // max(dp_size, 1)
+    C_loc = max(1, int(math.ceil(T_loc * mo.top_k * mo.capacity_factor / E)))
+
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    xspec = P(dp_entry, None)
+    rspec = P(dp_entry, None)
+    # expert weights: [E@tp, d(@dp if fsdp), f]
+    wspec = P(tp, dp_entry if cfg.sharding_plan == "fsdp_tp" else None, None)
+    wospec = P(tp, None, dp_entry if cfg.sharding_plan == "fsdp_tp" else None)
+
+    use_glu = "wg" in p
+    assert use_glu, "expert-parallel path expects GLU experts (all our MoE archs)"
+
+    def body(xf_, w_, i_, wi_, wg_, wo_):
+        sid = jax.lax.axis_index(tp)
+        if cfg.sharding_plan == "fsdp_tp" and dp:
+            wi_ = jax.lax.all_gather(wi_, dp, axis=1, tiled=True)
+            wg_ = jax.lax.all_gather(wg_, dp, axis=1, tiled=True)
+            wo_ = jax.lax.all_gather(wo_, dp, axis=2, tiled=True)
+        y = _local_dispatch_ffn(cfg, xf_, w_, i_, wi_, wg_, wo_, sid, E_loc,
+                                C_loc)
+        return jax.lax.psum(y, tp)
+
+    y = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, rspec, rspec, wspec, wspec, wospec),
+        out_specs=P(dp_entry, None),
+        check_vma=False,
+    )(xf, weights, idx, p["wi"], p["wg"], p["wo"])
+
+    if mo.num_shared_experts > 0:
+        y = y + _shared_ffn(p, cfg, xf)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,185 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Plans:
+  tp       : tensor-parallel on the "model" axis; params replicated over data.
+  fsdp_tp  : tp + the params' non-TP dim sharded over the data axes (ZeRO-3
+             style; GSPMD inserts the all-gathers). Optimizer state inherits
+             the param sharding, so it is fully sharded.
+
+Any logical dim whose size is not divisible by its mesh-axis extent falls back
+to replication (e.g. 6 attention heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import is_axes_leaf
+
+PyTree = Any
+AxisMapping = Union[None, str, Tuple[str, ...]]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All data-parallel-ish axes present in the mesh (pod composes as DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes_for_plan(mesh: Mesh, plan: str) -> Tuple[str, ...]:
+    """Axes the batch shards over. Under the pure-DP plan the model axis
+    carries batch too (otherwise the model-axis chips replicate compute)."""
+    axes = data_axes(mesh)
+    if plan == "dp" and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    return axes
+
+
+def make_rules(plan: str, mesh: Mesh) -> dict:
+    dp = data_axes(mesh)
+    rules = {
+        "vocab": "model",
+        "embed": None,
+        "mlp": "model",
+        "mlp2": None,
+        "heads": "model",
+        "kv_heads": None,     # kv heads < model-axis size for all our GQA archs
+        "head_dim": None,
+        "experts": "model",
+        "expert_mlp": None,
+        "layers": None,
+        "conv": None,
+        None: None,
+    }
+    if plan == "fsdp_tp":
+        rules["embed"] = dp  # ZeRO-3: shard the non-TP dim over data axes
+    elif plan == "dp":
+        # batch-only parallelism: replicate all params (right call for small
+        # archs like xlstm-350m where TP activation collectives dominate)
+        rules = {k: None for k in rules}
+    elif plan != "tp":
+        raise ValueError(plan)
+    return rules
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], rules: dict,
+             mesh: Mesh) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide or repeat."""
+    used: set = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        mapping: AxisMapping = rules.get(ax, None)
+        if mapping is None:
+            entries.append(None)
+            continue
+        maxes = (mapping,) if isinstance(mapping, str) else tuple(mapping)
+        maxes = tuple(a for a in maxes if a in mesh.axis_names and a not in used)
+        if not maxes:
+            entries.append(None)
+            continue
+        extent = int(np.prod([mesh.shape[a] for a in maxes]))
+        if dim % extent != 0:
+            # try progressively smaller prefixes of the axis tuple
+            ok = None
+            for cut in range(len(maxes) - 1, 0, -1):
+                ext = int(np.prod([mesh.shape[a] for a in maxes[:cut]]))
+                if dim % ext == 0:
+                    ok = maxes[:cut]
+                    break
+            if ok is None:
+                entries.append(None)
+                continue
+            maxes = ok
+        used.update(maxes)
+        entries.append(maxes if len(maxes) > 1 else maxes[0])
+    return P(*entries)
+
+
+def param_shardings(params: PyTree, axes_tree: PyTree, mesh: Mesh,
+                    plan: str) -> PyTree:
+    """NamedSharding tree matching params (abstract or concrete leaves)."""
+    rules = make_rules(plan, mesh)
+
+    def one(leaf, axes):
+        return NamedSharding(mesh, spec_for(leaf.shape, axes, rules, mesh))
+
+    # walk params and axes in parallel; axes leaves are tuples
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_a = jax.tree.leaves(axes_tree, is_leaf=is_axes_leaf)
+    assert len(flat_p) == len(flat_a), (len(flat_p), len(flat_a))
+    return jax.tree.unflatten(treedef, [one(p, a) for p, a in zip(flat_p, flat_a)])
+
+
+def batch_sharding(mesh: Mesh, ndim: int, batch_dim: int = 0,
+                   batch_size: Optional[int] = None,
+                   axes: Optional[Tuple[str, ...]] = None) -> NamedSharding:
+    dp = axes if axes is not None else data_axes(mesh)
+    entries: list = [None] * ndim
+    # largest axis prefix that divides the batch (e.g. batch 256 on 512 chips
+    # under the dp plan -> shard over (pod, data), model replicated)
+    while dp:
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        if batch_size is None or batch_size % dp_size == 0:
+            entries[batch_dim] = dp if len(dp) > 1 else dp[0]
+            break
+        dp = dp[:-1]
+    return NamedSharding(mesh, P(*entries))
+
+
+def batch_shardings(tree: PyTree, mesh: Mesh,
+                    axes: Optional[Tuple[str, ...]] = None) -> PyTree:
+    """Shard every leaf of a batch pytree along its leading (batch) dim
+    (replicated when the batch does not divide the data axes, e.g. batch=1)."""
+    return jax.tree.map(
+        lambda x: batch_sharding(mesh, len(x.shape),
+                                 batch_size=x.shape[0] if x.shape else None,
+                                 axes=axes),
+        tree)
+
+
+def decode_state_shardings(state_specs: PyTree, mesh: Mesh,
+                           batch_size: int,
+                           seq_shard_threshold: int = 8192) -> PyTree:
+    """Shardings for a decode state tree.
+
+    Batch dim -> data axes (when divisible). KV-cache sequence dims with
+    extent >= threshold -> "model" axis (the flash-decoding layout used by
+    repro.distributed.decode_attention). Structure-aware: leaves under
+    state["layers"]["groups"] carry a leading scan (layers) dim.
+    """
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    dp_entry: AxisMapping = (dp if len(dp) > 1 else dp[0]) if dp else None
+    if batch_size % max(dp_size, 1) != 0:
+        dp_entry = None  # e.g. long_500k batch=1: replicate over data axes
+    model_size = mesh.shape.get("model", 1)
+
+    def one(leaf, batch_dim: int):
+        shp = leaf.shape
+        nd = len(shp)
+        entries: list = [None] * nd
+        if nd > batch_dim:
+            entries[batch_dim] = dp_entry
+        for d in range(batch_dim + 1, nd):
+            if shp[d] >= seq_shard_threshold and shp[d] % model_size == 0:
+                entries[d] = "model"
+                break
+        return NamedSharding(mesh, P(*entries))
+
+    out: dict = {}
+    layers = state_specs["layers"]
+    out_layers: dict = {}
+    for section in ("prefix", "suffix"):
+        out_layers[section] = jax.tree.map(lambda l: one(l, 0),
+                                           layers.get(section, {}))
+    if "groups" in layers:
+        out_layers["groups"] = jax.tree.map(lambda l: one(l, 1),
+                                            layers["groups"])
+    out["layers"] = out_layers
+    out["cur"] = NamedSharding(mesh, P(dp_entry))
+    for k in state_specs:
+        if k not in out:
+            out[k] = jax.tree.map(lambda l: one(l, 0), state_specs[k])
+    return out

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots Moses tunes:
+#   matmul.py          tiled GEMM, tunable BlockSpec (block_m/n/k, k_inner,
+#                      out dtype) -- the primary auto-tuning target
+#   flash_attention.py causal/sliding-window flash attention (block_q/kv)
+#   rg_lru.py          RG-LRU linear scan (chunk, block_w)
+# ops.py dispatches registry-tuned configs; ref.py holds pure-jnp oracles.
+# Validated with interpret=True on CPU (tests/test_kernels.py).

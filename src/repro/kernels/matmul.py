@@ -1,0 +1,128 @@
+"""Tiled matmul Pallas TPU kernel — the primary auto-tuning target.
+
+The Moses knobs map directly onto this kernel:
+  block_m/n/k : BlockSpec tile sizes (VMEM working set, MXU shape)
+  k_inner     : 1 -> grid (gm, gn, gk), fp32 accumulator tile in VMEM scratch,
+                     single output write (the "accumulate-in-VMEM" schedule);
+                0 -> grid (gk, gm, gn), k outermost, output block revisited
+                     and accumulated in HBM (higher output traffic — exactly
+                     the c_traffic = (2*gk-1) term the device simulator and
+                     the 164-d features model)
+  out_bf16    : output store dtype
+
+Validated against ref.matmul_ref with interpret=True on CPU (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific compiler params (ignored in interpret mode)
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    pltpu = None
+    _HAS_PLTPU = False
+
+
+def _compiler_params(dimension_semantics):
+    if not _HAS_PLTPU:
+        return None
+    for cls_name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, cls_name, None)
+        if cls is not None:
+            try:
+                return cls(dimension_semantics=dimension_semantics)
+            except TypeError:
+                continue
+    return None
+
+
+def _matmul_kernel_kinner(a_ref, b_ref, o_ref, acc_ref, *, gk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == gk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _matmul_kernel_kouter(a_ref, b_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def matmul(
+    a: jax.Array,               # [M, K]
+    b: jax.Array,               # [K, N]
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    k_inner: bool = True,
+    out_bf16: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    out_dtype = jnp.bfloat16 if out_bf16 else jnp.float32
+
+    # pad to tile multiples (Pallas BlockSpecs need whole tiles)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    gm, gn, gk = Mp // bm, Np // bn, Kp // bk
+
+    if k_inner:
+        grid = (gm, gn, gk)
+        out = pl.pallas_call(
+            functools.partial(_matmul_kernel_kinner, gk=gk),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            compiler_params=_compiler_params(("parallel", "parallel",
+                                              "arbitrary")),
+            interpret=interpret,
+        )(a, b)
+    else:
+        grid = (gk, gm, gn)
+        out = pl.pallas_call(
+            _matmul_kernel_kouter,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda k, i, j: (i, k)),
+                pl.BlockSpec((bk, bn), lambda k, i, j: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda k, i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+            compiler_params=_compiler_params(("arbitrary", "parallel",
+                                              "parallel")),
+            interpret=interpret,
+        )(a, b)
+    return out[:M, :N]

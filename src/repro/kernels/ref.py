@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_bf16: bool = False) -> jax.Array:
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(jnp.bfloat16 if out_bf16 else jnp.float32)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0,
+                        scale=None) -> jax.Array:
+    """q,k,v: [B, S, D] (single head). Returns [B, S, D] fp32."""
+    B, S, D = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+def rg_lru_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """Linear recurrence h_t = a_t * h_{t-1} + x_t. a,x: [B, S, W] fp32."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), x.astype(jnp.float32)), axis=1)
+    return h

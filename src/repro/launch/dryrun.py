@@ -1,0 +1,423 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below may import jax.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.distributed import sharding as sh  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model, input_specs  # noqa: E402
+from repro.train.optimizer import AdamW, AdamWConfig  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def make_opt(cfg) -> AdamW:
+    return AdamW(AdamWConfig(
+        lr=1e-4, weight_decay=0.1,
+        moment_dtype=cfg.moment_dtype,
+        master_fp32=(cfg.param_dtype == "bfloat16")))
+
+
+def _sharded_bytes(abstract_tree, sharding_tree) -> int:
+    """Per-device argument bytes given shardings (analytic fits check)."""
+    total = 0
+    for leaf, shard in zip(jax.tree.leaves(abstract_tree),
+                           jax.tree.leaves(sharding_tree,
+                                           is_leaf=lambda x: isinstance(
+                                               x, NamedSharding))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        spec = shard.spec
+        denom = 1
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            for a in axes:
+                denom *= shard.mesh.shape[a]
+        total += n * leaf.dtype.itemsize // max(denom, 1)
+    return total
+
+
+def _use_distributed_cache(cfg, shape) -> bool:
+    if shape.kind != "decode":
+        return False
+    if cfg.mla is not None:
+        return False  # MLA decodes in latent space (einsum path)
+    from repro.models.model import cache_length
+    clen = cache_length(cfg, shape.seq_len)
+    return clen >= 8192 and clen % 16 == 0
+
+
+def build_lowerable(arch: str, shape_name: str, mesh,
+                    cfg_override=None):
+    """Returns (fn, example_args, in_shardings, out_shardings, meta)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    params_abs, axes = model.abstract_params_and_axes()
+    p_shard = sh.param_shardings(params_abs, axes, mesh, cfg.sharding_plan)
+    repl = NamedSharding(mesh, P())
+    meta: Dict[str, Any] = {"param_count": cfg.param_count(),
+                            "param_count_active": cfg.param_count(True)}
+
+    if shape.kind == "train":
+        opt = make_opt(cfg)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_shard = {k: (repl if k == "count" else p_shard)
+                     for k in opt_abs}
+        state_abs = {"params": params_abs, "opt": opt_abs,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_shard = {"params": p_shard, "opt": opt_shard, "step": repl}
+        batch_abs = specs["batch"]
+        baxes = sh.batch_axes_for_plan(mesh, cfg.sharding_plan)
+        batch_shard = sh.batch_shardings(batch_abs, mesh, axes=baxes)
+
+        def train_step(ts, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(ts["params"], batch)
+            new_params, new_opt, om = opt.update(grads, ts["opt"],
+                                                 ts["params"])
+            return ({"params": new_params, "opt": new_opt,
+                     "step": ts["step"] + 1},
+                    {"loss": loss, **om})
+
+        arg_bytes = _sharded_bytes(state_abs, state_shard)
+        meta["state_bytes_per_device"] = arg_bytes
+        return (train_step, (state_abs, batch_abs),
+                (state_shard, batch_shard), (state_shard, None), meta)
+
+    if shape.kind == "prefill":
+        batch_abs = specs["batch"]
+        batch_shard = sh.batch_shardings(
+            batch_abs, mesh, axes=sh.batch_axes_for_plan(mesh, cfg.sharding_plan))
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, max_len=shape.seq_len)
+
+        state_specs = model.init_decode_state_specs(shape.global_batch,
+                                                    shape.seq_len)
+        state_shard = sh.decode_state_shardings(state_specs, mesh,
+                                                shape.global_batch)
+        meta["state_bytes_per_device"] = _sharded_bytes(params_abs, p_shard)
+        return (prefill, (params_abs, batch_abs), (p_shard, batch_shard),
+                (state_shard, None), meta)
+
+    # decode
+    cfgm = cfg
+    state_abs = specs["state"]
+    tok_abs = specs["tokens"]
+    state_shard = sh.decode_state_shardings(state_abs, mesh,
+                                            shape.global_batch)
+    tok_shard = sh.batch_sharding(mesh, 1, batch_size=shape.global_batch)
+    extras: Dict[str, Any] = {}
+    if _use_distributed_cache(cfgm, shape):
+        from repro.distributed.decode_attention import \
+            make_distributed_attend_fn
+        extras["attend_fn"] = make_distributed_attend_fn(
+            mesh, batch_sharded=shape.global_batch % 32 == 0)
+        meta["distributed_cache"] = True
+
+    def serve_step(params, state, tokens):
+        st = dict(state)
+        st["extras"] = extras
+        return model.decode_step(params, st, tokens)
+
+    cache_bytes = _sharded_bytes(state_abs, state_shard)
+    meta["state_bytes_per_device"] = cache_bytes + _sharded_bytes(
+        params_abs, p_shard)
+    return (serve_step, (params_abs, state_abs, tok_abs),
+            (p_shard, state_shard, tok_shard), (state_shard, None), meta)
+
+
+def _hints_for(opt: str, mesh):
+    if opt in ("", "none", None):
+        return None
+    from repro.distributed.act_sharding import Hints
+    from repro.distributed.sharding import data_axes
+    tokens = set((opt or "").split(","))
+    if not tokens & {"zero3", "act", "moe", "epmoe"}:
+        return None
+    return Hints(mesh, data_axes(mesh), "model",
+                 zero3_gather=("zero3" in tokens),
+                 constrain_activations=("act" in tokens),
+                 moe_expert_parallel=("moe" in tokens),
+                 moe_impl=("expert_parallel" if "epmoe" in tokens else None))
+
+
+def apply_opt_to_cfg(cfg, opt: str):
+    """Config-level opt tokens: dpplan | chunk=<n> | remat=<policy>."""
+    for tok in (opt or "").split(","):
+        if tok == "dpplan":
+            cfg = cfg.replace(sharding_plan="dp")
+        elif tok.startswith("chunk="):
+            cfg = cfg.replace(scan_chunk=int(tok.split("=")[1]))
+        elif tok.startswith("remat="):
+            cfg = cfg.replace(remat_policy=tok.split("=")[1])
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, opt: str = "none",
+             cfg_override=None) -> Dict[str, Any]:
+    from repro.distributed.act_sharding import use_hints
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    cfg = apply_opt_to_cfg(cfg, opt)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "opt": opt}
+    ok, reason = cfg.supports_shape(shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return _save(rec) if save else rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(np.prod(list(mesh.shape.values())))
+        t0 = time.time()
+        fn, args, in_sh, out_sh, meta = build_lowerable(
+            arch, shape_name, mesh, cfg_override=cfg)
+        with mesh, use_hints(_hints_for(opt, mesh)):
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+            print(f"[{arch}|{shape_name}|{mesh_name}] memory_analysis:", mem)
+        except Exception as e:  # CPU backend may not implement it
+            mem_rec = {"error": str(e)[:200]}
+        cost = dict(compiled.cost_analysis() or {})
+        cost_clean = {k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and k in (
+                          "flops", "bytes accessed", "transcendentals",
+                          "optimal_seconds") or k.startswith("bytes accessed")}
+        print(f"[{arch}|{shape_name}|{mesh_name}] cost_analysis: "
+              f"flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e}")
+        hlo = compiled.as_text()
+        coll = roofline.collective_bytes(hlo)
+        mf = roofline.model_flops_for(cfg, shape)
+        terms = roofline.analyze(cost, coll, chips, model_flops=mf)
+        rec.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory_analysis=mem_rec,
+            cost_analysis=cost_clean,
+            collectives=coll,
+            model_flops=mf,
+            roofline={
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "dominant": terms.dominant,
+                "step_time_bound_s": terms.step_time_s,
+                "useful_flops_fraction": terms.useful_flops_fraction,
+                "roofline_fraction": terms.roofline_fraction,
+            },
+            hlo_bytes=len(hlo),
+            **meta,
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return _save(rec) if save else rec
+
+
+def calibrate_cell(arch: str, shape_name: str,
+                   opt: str = "none") -> Optional[Dict[str, Any]]:
+    """Correct the roofline for XLA's count-while-body-once behaviour.
+
+    XLA HloCostAnalysis visits a while (scan) body ONCE, so the scanned-stack
+    artifacts undercount flops/bytes/collectives by ~the layer count. We lower
+    two reduced-depth UNROLLED variants at full width/batch/seq (g=1 and g=2
+    repeated groups), fit the exact per-group cost line, and extrapolate to
+    the full depth:   metric(G) = intercept + per_group * G.
+    (Verified exact: unrolled depths fit a straight line; the intercept equals
+    the lm-head/embedding cost.)
+    """
+    from repro.models.transformer import stack_plan
+
+    cfg = apply_opt_to_cfg(get_config(arch), opt)
+    shape = SHAPES[shape_name]
+    ok, _ = cfg.supports_shape(shape)
+    if not ok:
+        return None
+    prefix, unit, n_groups, suffix = stack_plan(cfg)
+    if n_groups == 0:
+        return None  # already unrolled; artifact is exact
+    n_pre, n_unit, n_suf = len(prefix), len(unit), len(suffix)
+    g_full = (cfg.num_layers - n_pre) / n_unit  # suffix folded fractionally
+    mesh = make_production_mesh(multi_pod=False)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    from repro.distributed.act_sharding import use_hints
+    samples = {}
+    for g in (1, 2):
+        depth = n_pre + g * n_unit
+        cal_cfg = cfg.replace(num_layers=depth, scan_layers=False)
+        fn, args, in_sh, out_sh, _ = build_lowerable(
+            arch, shape_name, mesh, cfg_override=cal_cfg)
+        with mesh, use_hints(_hints_for(opt, mesh)):
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh).lower(*args).compile()
+        cost = dict(compiled.cost_analysis() or {})
+        coll = roofline.collective_bytes(compiled.as_text())
+        samples[g] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll.get("total_bytes", 0.0)),
+        }
+
+    def extrap(key):
+        per_group = samples[2][key] - samples[1][key]
+        intercept = samples[1][key] - per_group
+        return max(intercept + per_group * g_full, 0.0), per_group, intercept
+
+    flops, flops_pg, flops_ic = extrap("flops")
+    byts, _, _ = extrap("bytes")
+    coll_b, _, _ = extrap("coll")
+    mf = roofline.model_flops_for(cfg, shape)
+    terms = roofline.analyze({"flops": flops, "bytes accessed": byts},
+                             {"total_bytes": coll_b}, chips, model_flops=mf)
+    return {
+        "samples": samples,
+        "g_full": g_full,
+        "flops_per_chip": flops,
+        "bytes_per_chip": byts,
+        "collective_bytes_per_chip": coll_b,
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "step_time_bound_s": terms.step_time_s,
+            "useful_flops_fraction": terms.useful_flops_fraction,
+            "roofline_fraction": terms.roofline_fraction,
+        },
+    }
+
+
+def _artifact_path(arch: str, shape: str, mesh: str, opt: str = "none") -> str:
+    suffix = "" if opt in ("", "none", None) else f"__opt-{opt}"
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def _save(rec: Dict[str, Any]) -> Dict[str, Any]:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = _artifact_path(rec["arch"], rec["shape"], rec["mesh"],
+                          rec.get("opt", "none"))
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--opt", default="none",
+                    help="optimization variant: none | zero3 | act | "
+                         "zero3,act (artifacts get an __opt- suffix)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="add depth-extrapolated (scan-corrected) roofline "
+                         "to existing single-pod artifacts")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    if args.calibrate:
+        for arch in archs:
+            for shape_name in shapes:
+                path = _artifact_path(arch, shape_name, "single_pod_16x16",
+                                      args.opt)
+                if not os.path.exists(path):
+                    continue
+                with open(path) as f:
+                    rec = json.load(f)
+                if rec.get("status") != "ok":
+                    continue
+                if args.skip_existing and "calibrated" in rec:
+                    continue
+                t0 = time.time()
+                try:
+                    cal = calibrate_cell(arch, shape_name, opt=args.opt)
+                except Exception as e:
+                    print(f"CAL-ERR {arch} {shape_name}: {e}", flush=True)
+                    continue
+                if cal is None:
+                    continue
+                rec["calibrated"] = cal
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                r = cal["roofline"]
+                print(f"CAL   {arch:22s} {shape_name:12s} "
+                      f"dom={r['dominant']} bound={r['step_time_bound_s']:.4f}s"
+                      f" useful={r['useful_flops_fraction']:.2f}"
+                      f" roof={r['roofline_fraction']:.3f}"
+                      f" ({time.time()-t0:.0f}s)", flush=True)
+        return 0
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_name = ("multi_pod_2x16x16" if mp
+                             else "single_pod_16x16")
+                path = _artifact_path(arch, shape_name, mesh_name, args.opt)
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") == "ok":
+                            continue
+                rec = run_cell(arch, shape_name, mp, opt=args.opt)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                n_err += st == "error"
+                extra = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']} "
+                             f"bound={r['step_time_bound_s']:.4f}s "
+                             f"compile={rec['compile_s']:.0f}s")
+                elif st == "error":
+                    extra = rec["error"][:120]
+                else:
+                    extra = rec["reason"][:60]
+                print(f"{st.upper():5s} {arch:22s} {shape_name:12s} "
+                      f"{mesh_name:18s} {extra}", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} err={n_err}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,143 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs          (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_chip / HBM_bw              (819 GB/s)
+  collective = collective_bytes_per_chip / link_bw      (~50 GB/s/link ICI)
+
+cost_analysis() runs on the post-SPMD per-device module, so its flops/bytes
+are per-chip already. collective_bytes is NOT in cost_analysis: we parse the
+optimized HLO (compiled.as_text()) and sum result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+with ring-algorithm wire factors (all-reduce 2x, others 1x; single-link
+conservative assumption documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12         # bf16 / chip (given)
+HBM_BW = 819e9              # bytes/s / chip (given)
+LINK_BW = 50e9              # bytes/s / ICI link (given)
+HBM_PER_CHIP = 16 * 2**30   # v5e
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVE_FACTORS = {
+    "all-reduce": 2.0,          # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind wire bytes (per chip) from optimized HLO text."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_FACTORS}
+    count: Dict[str, int] = {k: 0 for k in _COLLECTIVE_FACTORS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_shapes, op = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        b = _shape_bytes(result_shapes)
+        out[op] += b * _COLLECTIVE_FACTORS[op]
+        count[op] += 1
+    out_total = {f"{k}_bytes": v for k, v in out.items()}
+    out_total.update({f"{k}_count": float(c) for k, c in count.items()})
+    out_total["total_bytes"] = sum(out.values())
+    return out_total
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops: float = 0.0
+    chips: int = 1
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap bound: the max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU bound at the analyzed step time."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.step_time_s) / PEAK_FLOPS
+
+
+def analyze(cost: Dict[str, float], coll: Dict[str, float], chips: int,
+            model_flops: float = 0.0) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.get("total_bytes", 0.0))
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cb / LINK_BW,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        coll_bytes_per_chip=cb,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

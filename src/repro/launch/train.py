@@ -1,0 +1,110 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+        --steps 200 --batch 8 --seq 128 [--smoke] [--autotune tpu_v5e] \
+        [--checkpoint-dir /tmp/ckpt] [--resume]
+
+--smoke uses the reduced same-family config (CPU-runnable); full configs need
+the production mesh. --autotune runs Moses cost-model adaptation for the
+target device first and persists tuned kernel configs to the registry (the
+paper's pipeline as a pre-training step of the launcher).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.moses import DEFAULT as MOSES_CFG
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.train.data import DataConfig, data_iterator
+from repro.train.optimizer import AdamW, AdamWConfig, cosine_schedule
+from repro.train.train_loop import LoopConfig, run_training
+
+
+def maybe_autotune(device: str, cfg):
+    from repro.autotune.dataset import generate_records, training_task_pool
+    from repro.autotune.registry import Registry
+    from repro.autotune.tasks import arch_tasks
+    from repro.autotune.tuner import tune
+    from repro.core.cost_model import init_mlp_params, train_cost_model
+
+    print(f"[autotune] Moses adaptation {MOSES_CFG.source_device} -> {device}")
+    pool = training_task_pool(include_archs=False)
+    src = generate_records(pool, MOSES_CFG.source_device,
+                           programs_per_task=24, seed=0)
+    params = init_mlp_params(MOSES_CFG.cost_model, jax.random.PRNGKey(0))
+    params, _ = train_cost_model(params, src, MOSES_CFG.cost_model, epochs=10)
+    tasks = arch_tasks(cfg)
+    result = tune(tasks, device, "moses", MOSES_CFG, trials_per_task=48,
+                  pretrained_params=params, source_pool=src)
+    reg = Registry()
+    reg.ingest(result)
+    reg.save()
+    print(f"[autotune] tuned {len(result.tasks)} tasks -> {reg.path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--autotune", default=None,
+                    help="target device for Moses kernel tuning")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--opt", default="act",
+                    help="perf hints: act | act,epmoe | none "
+                         "(EXPERIMENTS.md §Perf; act = pin scan-carry/block "
+                         "activation shardings, epmoe = shard_map expert "
+                         "parallelism)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.autotune:
+        maybe_autotune(args.autotune, cfg)
+
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else
+            make_host_mesh(model_parallel=args.model_parallel))
+    model = build_model(cfg)
+    opt = AdamW(AdamWConfig(
+        lr=cosine_schedule(args.lr, max(args.steps // 20, 1), args.steps),
+        weight_decay=0.01, moment_dtype=cfg.moment_dtype,
+        master_fp32=(cfg.param_dtype == "bfloat16")))
+    data = data_iterator(cfg, DataConfig(batch_size=args.batch,
+                                         seq_len=args.seq, seed=args.seed))
+    loop = LoopConfig(total_steps=args.steps,
+                      checkpoint_every=args.checkpoint_every,
+                      checkpoint_dir=args.checkpoint_dir)
+
+    from contextlib import nullcontext
+    from repro.distributed.act_sharding import Hints, use_hints
+    from repro.distributed.sharding import data_axes
+    tokens = set((args.opt or "none").split(","))
+    hints_ctx = nullcontext()
+    if tokens & {"act", "epmoe"}:
+        hints_ctx = use_hints(Hints(
+            mesh, data_axes(mesh), "model",
+            zero3_gather=False,
+            constrain_activations="act" in tokens,
+            moe_impl="expert_parallel" if "epmoe" in tokens else None))
+    with hints_ctx:
+        state, hist = run_training(model, opt, mesh, data, loop,
+                                   rng=jax.random.PRNGKey(args.seed))
+    print(f"final loss: {hist[-1]['loss']:.4f} over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts layer (DBRX-style top-k, DeepSeek-V3 shared+routed).
+
+Two implementations:
+  - "scatter" (default): capacity-based dispatch via gather/scatter. HLO FLOPs
+    are proportional to *active* expert compute (honest for roofline); XLA
+    GSPMD chooses the collectives. The hand-optimized expert-parallel
+    shard_map path lives in repro.distributed (perf iteration).
+  - "dense_mask": every expert computes every token, masked combine. Used as a
+    correctness oracle in tests (no capacity drops when cf is large).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamBuilder, activation
+
+
+def init_moe(b: ParamBuilder, cfg):
+    mo = cfg.moe
+    d = cfg.d_model
+    c = b.child("moe")
+    c.param("router", (d, mo.num_experts), ("embed", "experts"),
+            scale=1.0 / math.sqrt(d))
+    ff = mo.d_ff_expert
+    c.param("wi", (mo.num_experts, d, ff), ("experts", "embed", "expert_mlp"))
+    if cfg.use_glu:
+        c.param("wg", (mo.num_experts, d, ff), ("experts", "embed", "expert_mlp"))
+    c.param("wo", (mo.num_experts, ff, d), ("experts", "expert_mlp", "embed"))
+    if mo.num_shared_experts > 0:
+        ffs = (mo.d_ff_shared or ff) * mo.num_shared_experts
+        c.param("shared_wi", (d, ffs), ("embed", "mlp"))
+        if cfg.use_glu:
+            c.param("shared_wg", (d, ffs), ("embed", "mlp"))
+        c.param("shared_wo", (ffs, d), ("mlp", "embed"))
+
+
+def _router(p, cfg, x_flat):
+    """Top-k routing. Returns (weights [T,k], idx [T,k], aux_loss scalar)."""
+    mo = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, mo.top_k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss: E * sum_e f_e * P_e
+    E = mo.num_experts
+    f = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(f.sum(), 1.0)
+    P = probs.mean(axis=0)
+    aux = E * jnp.sum(f * P) * mo.aux_loss_coef
+    return weights, idx, aux
+
+
+def _expert_ffn(p, cfg, h_in):
+    """h_in: [E, C, d] -> [E, C, d]."""
+    act = activation(cfg.act)
+    h = jnp.einsum("ecd,edf->ecf", h_in, p["wi"].astype(h_in.dtype))
+    if cfg.use_glu:
+        h = act(h) * jnp.einsum("ecd,edf->ecf", h_in, p["wg"].astype(h_in.dtype))
+    else:
+        h = act(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(h_in.dtype))
+
+
+def _shared_ffn(p, cfg, x):
+    act = activation(cfg.act)
+    h = jnp.einsum("td,df->tf", x, p["shared_wi"].astype(x.dtype))
+    if cfg.use_glu:
+        h = act(h) * jnp.einsum("td,df->tf", x, p["shared_wg"].astype(x.dtype))
+    else:
+        h = act(h)
+    return jnp.einsum("tf,fd->td", h, p["shared_wo"].astype(x.dtype))
+
+
+def moe_forward_scatter(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss). Capacity-based scatter dispatch."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    weights, idx, aux = _router(p, cfg, xf)
+
+    E, k = mo.num_experts, mo.top_k
+    C = max(1, int(math.ceil(k * T * mo.capacity_factor / E)))
+    # assignment-major order: token t rank r -> row t*k + r
+    a = idx.reshape(T * k)
+    onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # exclusive cumsum
+    pos_in_expert = jnp.take_along_axis(pos, a[:, None], axis=1)[:, 0]
+    keep = pos_in_expert < C
+    dest = jnp.where(keep, a * C + pos_in_expert, E * C)  # E*C = drop slot
+
+    from repro.distributed.act_sharding import constrain, current
+    x_rep = jnp.repeat(xf, k, axis=0)  # [T*k, d] token-major
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].add(
+        x_rep * keep[:, None].astype(x.dtype))
+    expert_in = buf[: E * C].reshape(E, C, d)
+    h = current()
+    if h is not None and getattr(h, "moe_expert_parallel", False):
+        expert_in = constrain(expert_in, "tp", None, None)  # expert-parallel
+    expert_out = _expert_ffn(p, cfg, expert_in).reshape(E * C, d)
+    expert_out = jnp.concatenate(
+        [expert_out, jnp.zeros((1, d), expert_out.dtype)], axis=0)
+
+    gathered = expert_out[dest] * (
+        weights.reshape(T * k, 1).astype(x.dtype) * keep[:, None].astype(x.dtype))
+    y = gathered.reshape(T, k, d).sum(axis=1)
+    if mo.num_shared_experts > 0:
+        y = y + _shared_ffn(p, cfg, xf)
+    return y.reshape(B, S, d), aux
+
+
+def moe_forward_dense(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: all experts compute all tokens; combine with routing weights."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    weights, idx, aux = _router(p, cfg, xf)
+    # combine weights as dense [T, E]
+    w_dense = jnp.zeros((T, mo.num_experts), x.dtype)
+    w_dense = w_dense.at[jnp.arange(T)[:, None], idx].set(weights.astype(x.dtype))
+    all_in = jnp.broadcast_to(xf[None], (mo.num_experts, T, d))
+    all_out = _expert_ffn(p, cfg, all_in)  # [E, T, d]
+    y = jnp.einsum("etd,te->td", all_out, w_dense)
+    if mo.num_shared_experts > 0:
+        y = y + _shared_ffn(p, cfg, xf)
+    return y.reshape(B, S, d), aux
+
+
+def moe_forward(p, cfg, x, impl: str = "scatter"):
+    from repro.distributed.act_sharding import current
+    h = current()
+    if impl == "scatter" and h is not None and \
+            getattr(h, "moe_impl", None) == "expert_parallel":
+        impl = "expert_parallel"
+    if impl == "expert_parallel" and h is not None:
+        from repro.distributed.expert_parallel import \
+            moe_forward_expert_parallel
+        return moe_forward_expert_parallel(p, cfg, x, h)
+    if impl in ("scatter", "expert_parallel"):
+        return moe_forward_scatter(p, cfg, x)
+    if impl == "dense_mask":
+        return moe_forward_dense(p, cfg, x)
+    raise ValueError(impl)

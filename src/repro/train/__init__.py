@@ -1,0 +1,3 @@
+from repro.train import checkpoint, data, optimizer, train_loop
+
+__all__ = ["checkpoint", "data", "optimizer", "train_loop"]

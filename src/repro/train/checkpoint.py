@@ -1,0 +1,140 @@
+"""Checkpoint manager: atomic, keep-N, async-capable, elastic-reshard restore.
+
+Layout:
+  <dir>/step_<N>/
+      meta.json            {step, paths, shapes, dtypes}
+      arr_<i>.npy          one file per leaf (path-sorted)
+  <dir>/step_<N>.tmp...    staging dir, atomically renamed on completion
+
+restore(..., shardings=...) places leaves onto a (possibly different) mesh —
+this is the elastic-restart path: a checkpoint written on one mesh restores
+onto any other mesh whose shardings divide the shapes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# numpy can't represent bf16 natively; store as uint16 view + true dtype in meta
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    name = arr.dtype.name if arr.dtype.names is None else str(arr.dtype)
+    if name in _VIEW_AS or arr.dtype.kind == "V":
+        return arr.view(_VIEW_AS.get(name, np.uint16))
+    return arr
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_AS:
+        return arr.view(jnp.dtype(dtype_name))
+    return arr
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = False):
+        self.directory = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: PyTree) -> str:
+        if self._thread is not None:
+            self._thread.join()  # one outstanding async save at a time
+            self._thread = None
+        # materialize to host memory synchronously (cheap), write async
+        paths, leaves, _ = _flatten_with_paths(tree)
+        host_leaves = [np.asarray(x) for x in leaves]
+
+        def _write():
+            final = os.path.join(self.directory, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            meta = {"step": step, "paths": paths,
+                    "shapes": [list(x.shape) for x in host_leaves],
+                    "dtypes": [x.dtype.name for x in host_leaves]}
+            for i, arr in enumerate(host_leaves):
+                np.save(os.path.join(tmp, f"arr_{i}.npy"), _to_savable(arr))
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep_n] if self.keep_n > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: PyTree, shardings: Optional[PyTree] = None
+                ) -> PyTree:
+        """Restore into the structure of `like`. If shardings given, leaves are
+        device_put with them (elastic restart onto a different mesh)."""
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        paths, _, treedef = _flatten_with_paths(like)
+        stored = {p: i for i, p in enumerate(meta["paths"])}
+        leaves = []
+        for p in paths:
+            if p not in stored:
+                raise KeyError(f"checkpoint missing leaf {p}")
+            i = stored[p]
+            arr = np.load(os.path.join(d, f"arr_{i}.npy"))
+            leaves.append(_from_saved(arr, meta["dtypes"][i]))
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree

@@ -1,0 +1,116 @@
+"""AdamW from scratch (no optax in this container).
+
+Supports:
+  - configurable moment dtype (bf16 moments for >100B archs, fp32 default)
+  - fp32 master weights when params are bf16 (master lives in opt state and
+    inherits the param sharding -> fully sharded optimizer state)
+  - global-norm gradient clipping
+  - cosine schedule with linear warmup
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dtype_of
+
+PyTree = Any
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    master_fp32: bool = False  # keep fp32 master copy when params are low-prec
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+        self._lr = cfg.lr if callable(cfg.lr) else constant_schedule(cfg.lr)
+
+    def init(self, params: PyTree) -> PyTree:
+        mdt = dtype_of(self.cfg.moment_dtype)
+        state = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if self.cfg.master_fp32:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree):
+        cfg = self.cfg
+        count = state["count"] + 1
+        gnorm = global_norm(grads)
+        if cfg.grad_clip_norm > 0:
+            scale = jnp.minimum(1.0, cfg.grad_clip_norm /
+                                jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale), grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        lr = self._lr(count)
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        mdt = dtype_of(cfg.moment_dtype)
+
+        base = state["master"] if cfg.master_fp32 else params
+
+        def upd(g, m, v, p):
+            m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay > 0:
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            new_p32 = p.astype(jnp.float32) - lr * step
+            return m32.astype(mdt), v32.astype(mdt), new_p32
+
+        mvs = jax.tree.map(upd, grads, state["m"], state["v"], base)
+        m_new = jax.tree.map(lambda t: t[0], mvs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda t: t[1], mvs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        p32 = jax.tree.map(lambda t: t[2], mvs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(lambda p, q: q.astype(p.dtype), params, p32)
+        new_state = {"m": m_new, "v": v_new, "count": count}
+        if cfg.master_fp32:
+            new_state["master"] = p32
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)

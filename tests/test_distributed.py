@@ -1,0 +1,212 @@
+"""Sharding rules + multi-device behaviour (subprocess with forced device
+count where needed)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.distributed import sharding as sh
+from repro.models import build_model
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class TestShardingRules:
+    def test_spec_divisibility_fallback(self, host_mesh):
+        rules = sh.make_rules("tp", host_mesh)
+        # 6 heads on a 1-wide model axis: fine; on bigger axes must drop
+        spec = sh.spec_for((384, 6, 64), ("embed", "heads", "head_dim"),
+                           rules, host_mesh)
+        assert isinstance(spec, P)
+
+    def test_param_shardings_cover_all_leaves(self, host_mesh):
+        cfg = get_smoke_config("glm4-9b")
+        model = build_model(cfg)
+        params_abs, axes = model.abstract_params_and_axes()
+        shardings = sh.param_shardings(params_abs, axes, host_mesh,
+                                       cfg.sharding_plan)
+        n_p = len(jax.tree.leaves(params_abs))
+        n_s = len(jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec")))
+        assert n_p == n_s
+
+    def test_abstract_matches_concrete_init(self):
+        """abstract_params_and_axes shapes == real init shapes."""
+        cfg = get_smoke_config("deepseek-v3-671b")
+        model = build_model(cfg)
+        abs_p, _ = model.abstract_params_and_axes()
+        real_p = model.init(jax.random.PRNGKey(0))
+        af = jax.tree_util.tree_flatten_with_path(abs_p)[0]
+        rf = jax.tree_util.tree_flatten_with_path(real_p)[0]
+        assert len(af) == len(rf)
+        for (pa, a), (pb, r) in zip(af, rf):
+            assert str(pa) == str(pb)
+            assert tuple(a.shape) == tuple(r.shape), (pa, a.shape, r.shape)
+            assert a.dtype == r.dtype
+
+
+@pytest.mark.slow
+class TestMultiDevice:
+    """Runs in a subprocess with 8 forced host devices."""
+
+    def _run(self, body: str) -> str:
+        script = textwrap.dedent("""
+            import os
+            os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+            import sys; sys.path.insert(0, %r)
+            import jax, jax.numpy as jnp
+            import numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+        """ % SRC) + textwrap.dedent(body)
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return out.stdout
+
+    def test_fsdp_tp_train_step_and_distributed_decode(self):
+        stdout = self._run("""
+            from repro.configs import get_smoke_config
+            from repro.models import build_model
+            from repro.distributed import sharding as sh
+            from repro.train.optimizer import AdamW, AdamWConfig
+            from repro.train.train_loop import (init_train_state,
+                make_train_step, make_serve_prefill, make_serve_step)
+
+            mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
+                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+            cfg = get_smoke_config('glm4-9b').replace(
+                sharding_plan='fsdp_tp', num_layers=4,
+                activation_dtype='float32')
+            model = build_model(cfg)
+            opt = AdamW(AdamWConfig(lr=1e-3))
+            state = init_train_state(model, opt, mesh, jax.random.PRNGKey(0))
+            step = make_train_step(model, opt, mesh)
+            B, S = 8, 16
+            batch = {'tokens': jnp.zeros((B, S), jnp.int32),
+                     'targets': jnp.zeros((B, S), jnp.int32)}
+            batch = jax.device_put(batch, sh.batch_shardings(batch, mesh))
+            state, m = step(state, batch)
+            assert np.isfinite(float(m['loss']))
+            params = state['params']
+            pf = make_serve_prefill(model, mesh, max_len=32)
+            sv_d = make_serve_step(model, mesh, distributed_cache=True)
+            sv_p = make_serve_step(model, mesh, distributed_cache=False)
+            toks = jax.random.randint(jax.random.PRNGKey(1), (B, 15), 0,
+                                      cfg.vocab_size)
+            st, _ = pf(params, {'tokens': toks})
+            _, l1 = sv_p(params, dict(st), jnp.ones((B,), jnp.int32))
+            specs = model.init_decode_state_specs(B, 32)
+            shardings = sh.decode_state_shardings(specs, mesh, B,
+                                                  seq_shard_threshold=8)
+            st2 = jax.device_put(st, shardings)
+            _, l2 = sv_d(params, dict(st2), jnp.ones((B,), jnp.int32))
+            err = float(jnp.abs(l1 - l2).max())
+            assert err < 1e-4, err
+            print('MULTIDEVICE_OK', float(m['loss']), err)
+        """)
+        assert "MULTIDEVICE_OK" in stdout
+
+    def test_compressed_psum_shard_map(self):
+        stdout = self._run("""
+            from functools import partial
+            from repro.distributed.compression import compressed_psum
+            mesh = jax.make_mesh((8,), ('data',),
+                axis_types=(jax.sharding.AxisType.Auto,))
+            x = jnp.asarray(np.random.RandomState(0).randn(8, 32),
+                            jnp.float32)
+            e = jnp.zeros((8, 32))
+
+            def f(xb, eb):  # per-shard blocks [1, 32]
+                out, new_e = compressed_psum(xb[0], eb[0], ('data',))
+                return out, new_e[None]
+
+            out, new_e = jax.shard_map(
+                f, mesh=mesh, in_specs=(P('data'), P('data')),
+                out_specs=(P(), P('data')), check_vma=False)(x, e)
+            exact = np.asarray(x).mean(axis=0)
+            err = np.abs(np.asarray(out) - exact).max()
+            scale = np.abs(np.asarray(x)).max() / 127
+            assert err <= scale * 1.01, (err, scale)
+            print('PSUM_OK', err)
+        """)
+        assert "PSUM_OK" in stdout
+
+
+@pytest.mark.slow
+class TestPipeline:
+    def test_gpipe_matches_sequential(self):
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+            import os
+            os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+            import sys; sys.path.insert(0, %r)
+            import jax, jax.numpy as jnp
+            from repro.distributed.pipeline import pipeline_apply
+            mesh = jax.make_mesh((4,), ('pod',),
+                axis_types=(jax.sharding.AxisType.Auto,))
+            W = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8)) * 0.3
+            def stage_fn(stage, x):
+                return jnp.tanh(x @ W[stage])
+            x = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 8))
+            out = pipeline_apply(stage_fn, x, mesh, num_stages=4)
+            ref = x
+            for s in range(4):
+                ref = jnp.tanh(ref @ W[s])
+            err = float(jnp.abs(out - ref).max())
+            assert err < 1e-5, err
+            print('PIPELINE_OK')
+        """ % SRC)], capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "PIPELINE_OK" in out.stdout
+
+
+@pytest.mark.slow
+class TestExpertParallelMoE:
+    def test_matches_dense_oracle_with_grads(self):
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+            import os
+            os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+            import sys; sys.path.insert(0, %r)
+            import dataclasses, jax, jax.numpy as jnp
+            from repro.configs import get_smoke_config
+            from repro.models import moe as moe_mod
+            from repro.models.common import ParamBuilder
+            from repro.distributed.act_sharding import Hints, use_hints
+            mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
+                axis_types=(jax.sharding.AxisType.Auto,)*3)
+            cfg = get_smoke_config('dbrx-132b').replace(
+                activation_dtype='float32')
+            cfg = cfg.replace(moe=dataclasses.replace(
+                cfg.moe, num_experts=4, top_k=2, capacity_factor=8.0))
+            b = ParamBuilder(jax.random.PRNGKey(0), 'float32')
+            moe_mod.init_moe(b, cfg)
+            p = b.params['moe']
+            x = jax.random.normal(jax.random.PRNGKey(1),
+                                  (4, 16, cfg.d_model)) * 0.5
+            y_ref, aux_ref = moe_mod.moe_forward(p, cfg, x, impl='dense_mask')
+            hints = Hints(mesh, ('pod', 'data'), 'model',
+                          moe_impl='expert_parallel')
+            with mesh, use_hints(hints):
+                y_ep, aux_ep = jax.jit(lambda p, x: moe_mod.moe_forward(
+                    p, cfg, x, impl='expert_parallel'))(p, x)
+            err = float(jnp.abs(y_ep - y_ref).max())
+            assert err < 2e-4, err
+            def loss(p, x):
+                with use_hints(hints):
+                    y, aux = moe_mod.moe_forward(p, cfg, x,
+                                                 impl='expert_parallel')
+                return jnp.sum(y**2) + aux
+            with mesh:
+                g = jax.jit(jax.grad(loss))(p, x)
+            assert all(bool(jnp.isfinite(v).all())
+                       for v in jax.tree.leaves(g))
+            print('EPMOE_OK', err)
+        """ % SRC)], capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "EPMOE_OK" in out.stdout

@@ -1,0 +1,178 @@
+"""Unit + property tests for the paper's core: lottery masks (Eq. 5/7),
+adaptive controller (§3.5), adaptation (§3.4), cost model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.moses import DEFAULT as MCFG, CostModelConfig, MosesConfig
+from repro.core import lottery
+from repro.core.ac import ACState, AdaptiveController
+from repro.core.adaptation import MosesAdapter
+from repro.core.cost_model import (Records, init_mlp_params, mlp_forward,
+                                   normalize_per_task, predict,
+                                   rank_correlation, train_cost_model)
+
+
+def _toy_params(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"w0": jax.random.normal(k, (8, 4)),
+            "b0": jax.random.normal(jax.random.fold_in(k, 1), (4,))}
+
+
+def _toy_grads(params, key=1):
+    k = jax.random.PRNGKey(key)
+    return jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(k, p.size), p.shape),
+        params)
+
+
+class TestLottery:
+    def test_xi_is_elementwise_abs_product(self):
+        p = _toy_params()
+        g = _toy_grads(p)
+        xi = lottery.xi_scores(p, g)
+        np.testing.assert_allclose(np.asarray(xi["w0"]),
+                                   np.abs(np.asarray(p["w0"] * g["w0"])))
+
+    @given(ratio=st.floats(0.01, 0.99))
+    @settings(max_examples=20, deadline=None)
+    def test_ratio_mask_fraction_property(self, ratio):
+        """mask_by_ratio selects ~ratio of all parameters (hypothesis)."""
+        p = _toy_params()
+        g = _toy_grads(p)
+        mask = lottery.transferable_mask(p, g, ratio=ratio, use_ratio=True)
+        frac = lottery.mask_fraction(mask)
+        n = sum(x.size for x in jax.tree.leaves(p))
+        assert abs(frac - ratio) <= 1.5 / n + 0.03
+
+    def test_threshold_mask_monotone(self):
+        p = _toy_params()
+        g = _toy_grads(p)
+        scores = lottery.xi_scores(p, g)
+        m_low = lottery.mask_by_threshold(scores, 0.1)
+        m_high = lottery.mask_by_threshold(scores, 0.9)
+        assert lottery.mask_fraction(m_low) >= lottery.mask_fraction(m_high)
+
+    def test_variant_params_decay_invariant_params_update(self):
+        p = {"w": jnp.array([1.0, 1.0])}
+        updates = {"w": jnp.array([0.5, 0.5])}
+        mask = {"w": jnp.array([1.0, 0.0])}
+        new = lottery.masked_update(p, updates, mask, variant_decay=0.1,
+                                    lr=1.0)
+        assert float(new["w"][0]) == pytest.approx(1.5)   # invariant: updated
+        assert float(new["w"][1]) == pytest.approx(0.9)   # variant: decayed
+
+    @given(decay=st.floats(0.01, 0.5), steps=st.integers(1, 30))
+    @settings(max_examples=15, deadline=None)
+    def test_variant_decay_converges_to_zero(self, decay, steps):
+        """Eq. 7: repeated variant decay is a contraction toward 0."""
+        w = {"w": jnp.ones((4,))}
+        mask = {"w": jnp.zeros((4,))}
+        upd = {"w": jnp.zeros((4,))}
+        for _ in range(steps):
+            w = lottery.masked_update(w, upd, mask, decay, lr=1.0)
+        assert float(jnp.abs(w["w"]).max()) <= (1 - decay) ** steps + 1e-6
+
+
+class TestAC:
+    def test_plan_splits_budget(self):
+        ac = AdaptiveController(train_ratio=0.5, num_batches=4)
+        sizes, n_pred = ac.plan(200)
+        assert sum(sizes) == 100 and n_pred == 100
+        assert len(sizes) == 4
+
+    def test_terminates_on_stable_predictions(self):
+        ac = AdaptiveController(cv_threshold=0.1, min_batches=2)
+        s = ACState()
+        s = ac.update(s, np.array([1.0, 1.0]))
+        assert not s.terminated
+        s = ac.update(s, np.array([1.01, 0.99]))
+        assert s.terminated
+
+    def test_keeps_measuring_when_uncertain(self):
+        ac = AdaptiveController(cv_threshold=0.01, min_batches=2)
+        s = ACState()
+        for v in (1.0, 3.0, 0.2, 2.5):
+            s = ac.update(s, np.array([v]))
+        assert not s.terminated
+
+    @given(st.lists(st.floats(0.5, 2.0), min_size=4, max_size=8))
+    @settings(max_examples=25, deadline=None)
+    def test_cv_threshold_property(self, means):
+        """AC terminates iff the running CV over batch means < threshold."""
+        ac = AdaptiveController(cv_threshold=0.08, min_batches=len(means))
+        s = ACState()
+        for m in means:
+            s = ac.update(s, np.array([m]))
+        cv = np.std(means) / max(abs(np.mean(means)), 1e-9)
+        assert s.terminated == (cv < 0.08)
+
+
+def _synth_records(n_tasks=6, per_task=40, seed=0, flip=False):
+    """Synthetic records with a learnable linear structure."""
+    rng = np.random.RandomState(seed)
+    w = rng.randn(MCFG.cost_model.feature_dim)
+    if flip:
+        w = -w
+    xs, ys, gs = [], [], []
+    for g in range(n_tasks):
+        x = rng.randn(per_task, MCFG.cost_model.feature_dim).astype(np.float32)
+        raw = (x @ w + 0.1 * rng.randn(per_task)).astype(np.float32)
+        raw = np.exp(raw / (np.abs(raw).max() + 1e-6))
+        xs.append(x)
+        ys.append(raw)
+        gs.append(np.full(per_task, g, np.int32))
+    x = np.concatenate(xs)
+    raw = np.concatenate(ys)
+    g = np.concatenate(gs)
+    return Records(x=x, y=normalize_per_task(raw, g), g=g, raw_throughput=raw)
+
+
+class TestCostModel:
+    def test_training_improves_rank_correlation(self):
+        rec = _synth_records()
+        params = init_mlp_params(MCFG.cost_model, jax.random.PRNGKey(0))
+        before = rank_correlation(params, rec)
+        params, losses = train_cost_model(params, rec, MCFG.cost_model,
+                                          epochs=10)
+        after = rank_correlation(params, rec)
+        assert after > max(before, 0.5)
+        assert losses[-1] < losses[0]
+
+    def test_hidden_layer_exposed_for_discriminator(self):
+        params = init_mlp_params(MCFG.cost_model, jax.random.PRNGKey(0))
+        x = jnp.zeros((3, MCFG.cost_model.feature_dim))
+        s, h = mlp_forward(params, x, return_hidden=True)
+        assert s.shape == (3,)
+        assert h.shape == (3, MCFG.cost_model.hidden_dims[-1])
+
+
+class TestAdaptation:
+    def test_moses_adapts_better_than_frozen_on_flipped_domain(self):
+        """Target domain reverses the ranking signal on part of the features;
+        Moses adaptation must beat the frozen source model."""
+        src = _synth_records(seed=0)
+        tgt = _synth_records(seed=0, flip=True)
+        params = init_mlp_params(MCFG.cost_model, jax.random.PRNGKey(0))
+        params, _ = train_cost_model(params, src, MCFG.cost_model, epochs=8)
+        frozen_corr = rank_correlation(params, tgt)
+        adapter = MosesAdapter(cfg=MCFG, params=jax.tree.map(jnp.copy, params),
+                               source_pool=src)
+        small = Records(x=tgt.x[:80], y=tgt.y[:80], g=tgt.g[:80])
+        adapter.adapt(small, epochs=10)
+        adapted_corr = rank_correlation(adapter.params, tgt)
+        assert adapted_corr > frozen_corr + 0.2
+
+    def test_mask_fraction_tracks_ratio(self):
+        src = _synth_records(seed=0)
+        params = init_mlp_params(MCFG.cost_model, jax.random.PRNGKey(0))
+        for ratio in (0.1, 0.5):
+            cfg = MosesConfig(transferable_ratio=ratio)
+            adapter = MosesAdapter(cfg=cfg,
+                                   params=jax.tree.map(jnp.copy, params))
+            adapter.adapt(Records(x=src.x[:64], y=src.y[:64], g=src.g[:64]),
+                          epochs=1)
+            fracs = [h["mask_frac"] for h in adapter.history]
+            assert abs(np.mean(fracs) - ratio) < 0.05, (ratio, fracs)

@@ -1,0 +1,157 @@
+"""End-to-end behaviour tests for the paper's system:
+the full Moses pipeline (pretrain -> transfer -> adapt -> tune) must beat the
+paper's baselines on CMAT, and the training/serving stack must work."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune.dataset import generate_records, training_task_pool
+from repro.autotune.tasks import paper_dnn_tasks
+from repro.autotune.tuner import tune
+from repro.configs import get_smoke_config
+from repro.configs.moses import DEFAULT as MCFG
+from repro.core.cost_model import (init_mlp_params, rank_correlation,
+                                   train_cost_model)
+from repro.core.metrics import cmat, summarize
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def pretrained():
+    pool = training_task_pool(include_archs=False)
+    src = generate_records(pool, MCFG.source_device, programs_per_task=20,
+                           seed=0)
+    params = init_mlp_params(MCFG.cost_model, jax.random.PRNGKey(0))
+    params, _ = train_cost_model(params, src, MCFG.cost_model, epochs=8)
+    return pool, src, params
+
+
+def test_pretrained_model_ranks_source_device(pretrained):
+    pool, src, params = pretrained
+    corr = rank_correlation(params, src)
+    assert corr > 0.85, corr
+
+
+def test_transfer_gap_exists(pretrained):
+    """The far-transfer target must be harder than the near one (paper §1)."""
+    pool, src, params = pretrained
+    near = generate_records(pool[:12], "tpu_v5e", programs_per_task=20, seed=5)
+    far = generate_records(pool[:12], "tpu_edge", programs_per_task=20, seed=5)
+    c_near = rank_correlation(params, near)
+    c_far = rank_correlation(params, far)
+    assert c_far < c_near, (c_far, c_near)
+
+
+def test_moses_beats_baselines_on_cmat(pretrained):
+    """The paper's headline: Moses wins CMAT over Tenset-Finetune on the
+    far-transfer device (Table 1)."""
+    pool, src, params = pretrained
+    tasks = paper_dnn_tasks("squeezenet")[:5]
+    results = {}
+    for strat in ("tenset-pretrain", "tenset-finetune", "moses"):
+        results[strat] = tune(tasks, "tpu_edge", strat, MCFG,
+                              trials_per_task=32, pretrained_params=params,
+                              source_pool=src, seed=1)
+    s = summarize(results, "tenset-finetune")
+    assert s["moses"]["cmat_vs_ref"] > 20.0, s
+    assert s["moses"]["cmat_vs_ref"] > s["tenset-pretrain"]["cmat_vs_ref"]
+    # AC early termination => fewer on-device measurements
+    assert (results["moses"].total_measurements
+            < results["tenset-finetune"].total_measurements)
+
+
+def test_moses_search_faster_than_finetune(pretrained):
+    pool, src, params = pretrained
+    tasks = paper_dnn_tasks("bert-base")[:3]
+    r_ft = tune(tasks, "tpu_edge", "tenset-finetune", MCFG,
+                trials_per_task=32, pretrained_params=params, seed=2)
+    r_mo = tune(tasks, "tpu_edge", "moses", MCFG, trials_per_task=32,
+                pretrained_params=params, source_pool=src, seed=2)
+    assert r_mo.total_search_seconds < r_ft.total_search_seconds
+
+
+def test_tuned_configs_beat_default(pretrained):
+    """Auto-tuning must beat the vendor-default 'raw' baseline end-to-end."""
+    pool, src, params = pretrained
+    tasks = paper_dnn_tasks("resnet18")[:4]
+    r_raw = tune(tasks, "tpu_v5e", "raw", MCFG, trials_per_task=0)
+    r_mo = tune(tasks, "tpu_v5e", "moses", MCFG, trials_per_task=32,
+                pretrained_params=params, source_pool=src, seed=3)
+    assert r_mo.model_latency < r_raw.model_latency
+
+
+def test_registry_roundtrip_feeds_kernels(pretrained, tmp_path):
+    from repro.autotune.registry import Registry
+    pool, src, params = pretrained
+    tasks = paper_dnn_tasks("bert-base")[:2]
+    r = tune(tasks, "tpu_v5e", "moses", MCFG, trials_per_task=16,
+             pretrained_params=params, source_pool=src, seed=4)
+    reg = Registry(path=str(tmp_path / "tuned.json"))
+    reg.ingest(r)
+    reg.save()
+    reg2 = Registry(path=str(tmp_path / "tuned.json"))
+    cfg = reg2.get("tpu_v5e", tasks[0])
+    assert "block_m" in cfg.as_dict()
+
+
+def test_end_to_end_training_learns():
+    """Tiny end-to-end run: loss decreases on the structured stream."""
+    from repro.train.data import DataConfig, data_iterator
+    from repro.train.optimizer import AdamW, AdamWConfig, cosine_schedule
+    from repro.train.train_loop import LoopConfig, run_training
+    import tempfile
+
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    model = build_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    opt = AdamW(AdamWConfig(lr=cosine_schedule(3e-3, 5, 40)))
+    it = data_iterator(cfg, DataConfig(batch_size=8, seq_len=32, seed=0))
+    with tempfile.TemporaryDirectory() as d:
+        loop = LoopConfig(total_steps=40, checkpoint_every=40,
+                          checkpoint_dir=d, log_every=1000,
+                          async_checkpoint=False)
+        _, hist = run_training(model, opt, mesh, it, loop,
+                               rng=jax.random.PRNGKey(0),
+                               log_fn=lambda s: None)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.5
+
+
+def test_serving_engine_greedy_deterministic():
+    from repro.serve import Engine, Request
+    cfg = get_smoke_config("xlstm-350m")
+    model = build_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(3)]
+
+    def gen():
+        eng = Engine(model, params, mesh, max_len=32, batch_slots=2)
+        reqs = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+        eng.generate(reqs)
+        return [r.out_tokens for r in reqs]
+
+    a, b = gen(), gen()
+    assert a == b
+    assert all(len(t) == 6 for t in a)
+
+
+def test_roofline_collective_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = '''
+  %ar = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %x), replica_groups={}
+  %ag = bf16[8,128]{1,0} all-gather(bf16[4,128]{1,0} %y), dimensions={0}
+  %rs = f32[256]{0} reduce-scatter(f32[2048]{0} %z), dimensions={0}
+  %cp = (f32[64]{0}, f32[64]{0}) collective-permute(f32[64]{0} %w), source_target_pairs={{0,1}}
+  %other = f32[10]{0} add(f32[10]{0} %a, f32[10]{0} %b)
+'''
+    out = collective_bytes(hlo)
+    assert out["all-reduce_bytes"] == 1024 * 512 * 4 * 2  # ring 2x
+    assert out["all-gather_bytes"] == 8 * 128 * 2
+    assert out["reduce-scatter_bytes"] == 256 * 4
+    assert out["collective-permute_bytes"] == 64 * 4 * 2  # tuple result
+    assert out["total_bytes"] > 0
