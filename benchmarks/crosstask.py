@@ -15,10 +15,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import SMALL_TRIALS, emit, pretrained_cost_model
+from benchmarks.common import SMALL_TRIALS, default_session, emit
 from repro.autotune.tasks import paper_dnn_tasks
-from repro.autotune.tuner import tune
-from repro.configs.moses import DEFAULT as MCFG
 
 
 def _early_quality(result, k: int = 8) -> float:
@@ -34,17 +32,15 @@ def _early_quality(result, k: int = 8) -> float:
 
 
 def main(trials: int = SMALL_TRIALS, device: str = "tpu_edge"):
-    blob = pretrained_cost_model()
+    session = default_session(seed=11, trials=trials)
     rows = []
     for dnn in ("squeezenet", "resnet18"):  # many similar conv subgraphs
         tasks = paper_dnn_tasks(dnn)
-        base = tune(tasks, device, "moses", MCFG, trials_per_task=trials,
-                    pretrained_params=blob["params"],
-                    source_pool=blob["source_records"], seed=11)
-        xfer = tune(tasks, device, "moses", MCFG, trials_per_task=trials,
-                    pretrained_params=blob["params"],
-                    source_pool=blob["source_records"], seed=11,
-                    cross_task=True)
+        # same salt for both jobs -> identical RNG stream; the ONLY delta
+        # between the runs is the cross-task warm-start archive
+        base = session.run(tasks, device, "moses", salt=dnn)
+        xfer = session.run(tasks, device, "moses", salt=dnn,
+                           cross_task=True)
         eq_b, eq_x = _early_quality(base), _early_quality(xfer)
         rows.append({
             "name": f"crosstask/{dnn}/{device}",

@@ -8,8 +8,10 @@ from benchmarks.common import DNNS, SMALL_TRIALS, emit, run_matrix
 from repro.core.metrics import latency_gain
 
 
-def main(trials: int = SMALL_TRIALS):
-    results = run_matrix(trials=trials)
+def main(trials: int = SMALL_TRIALS, session=None):
+    """session: optional shared TuneSession (benchmarks/run.py passes one so
+    fig4/fig5/table1 reuse a single pretrained model + job-seed scheme)."""
+    results = run_matrix(trials=trials, session=session)
     rows = []
     for key, per_strat in results.items():
         ref = per_strat["tenset-finetune"]

@@ -7,8 +7,9 @@ from benchmarks.common import SMALL_TRIALS, emit, run_matrix
 from repro.core.metrics import search_efficiency_gain
 
 
-def main(trials: int = SMALL_TRIALS):
-    results = run_matrix(trials=trials)
+def main(trials: int = SMALL_TRIALS, session=None):
+    """session: optional shared TuneSession (see fig4_inference_gain.main)."""
+    results = run_matrix(trials=trials, session=session)
     rows = []
     for key, per_strat in results.items():
         ref = per_strat["tenset-finetune"]

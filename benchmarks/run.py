@@ -37,9 +37,22 @@ def main() -> None:
     small = 200 if args.full else SMALL_TRIALS
     large = 2000 if args.full else LARGE_TRIALS
 
+    # fig4/fig5 share one TuneSession (and thus one pretrained model and one
+    # run_matrix result) instead of each re-building the setup; built lazily
+    # so `--only dataset` etc. don't pay the pretraining cost
+    from benchmarks.common import default_session
+    _shared = []
+
+    def shared():
+        if not _shared:
+            _shared.append(default_session(trials=small))
+        return _shared[0]
+
     benches = {
-        "fig4": lambda: fig4_inference_gain.main(trials=small),
-        "fig5": lambda: fig5_search_efficiency.main(trials=small),
+        "fig4": lambda: fig4_inference_gain.main(trials=small,
+                                                 session=shared()),
+        "fig5": lambda: fig5_search_efficiency.main(trials=small,
+                                                    session=shared()),
         "table1": lambda: table1_cmat.main(small=small, large=large),
         "fig6": lambda: fig6_ratio_ablation.main(trials=small),
         "kernels": lambda: kernels_bench.main(trials=small),

@@ -21,9 +21,9 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.autotune.dataset import generate_records, training_task_pool  # noqa: E402
 from repro.autotune.registry import Registry  # noqa: E402
+from repro.autotune.session import TuneSession  # noqa: E402
 from repro.autotune.space import default_config  # noqa: E402
 from repro.autotune.tasks import arch_tasks  # noqa: E402
-from repro.autotune.tuner import tune  # noqa: E402
 from repro.autotune import devices as dev_mod  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.configs.moses import DEFAULT as MOSES  # noqa: E402
@@ -50,14 +50,14 @@ def main():
                            seed=0)
     params = init_mlp_params(MOSES.cost_model, jax.random.PRNGKey(0))
     params, _ = train_cost_model(params, src, MOSES.cost_model, epochs=10)
-    result = tune(tasks, args.device, "moses", MOSES,
-                  trials_per_task=args.trials, pretrained_params=params,
-                  source_pool=src, seed=0)
-
     reg_path = os.path.join(tempfile.mkdtemp(prefix="repro_reg_"),
                             "tuned.json")
     reg = Registry(path=reg_path)
-    reg.ingest(result)
+    # session jobs auto-ingest their winners into the registry
+    session = TuneSession(moses_cfg=MOSES, pretrained_params=params,
+                          source_pool=src, seed=0,
+                          trials_per_task=args.trials, registry=reg)
+    result = session.run(tasks, args.device, "moses")
     reg.save()
     ops.set_registry(Registry(path=reg_path))
     print(f"   registry -> {reg_path}")

@@ -15,8 +15,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 from repro.autotune.dataset import generate_records, training_task_pool  # noqa: E402
+from repro.autotune.session import TuneSession  # noqa: E402
 from repro.autotune.tasks import paper_dnn_tasks  # noqa: E402
-from repro.autotune.tuner import tune  # noqa: E402
 from repro.configs.moses import DEFAULT as MOSES  # noqa: E402
 from repro.core.cost_model import (init_mlp_params, rank_correlation,  # noqa: E402
                                    train_cost_model)
@@ -40,14 +40,16 @@ def main():
     print(f"   rank-corr on tpu_edge WITHOUT adaptation: "
           f"{rank_correlation(params, far):.3f}  <- the gap Moses closes")
 
-    # 3. Online: tune SqueezeNet on the target under each strategy
+    # 3. Online: tune SqueezeNet on the target under each strategy; the
+    # TuneSession shares the pretrained model across jobs and gives each
+    # (device, strategy) job an isolated RNG stream
     print("== Step 2: tune SqueezeNet on tpu_edge (paper Fig. 4/5 setting) ==")
     tasks = paper_dnn_tasks("squeezenet")
+    session = TuneSession(moses_cfg=MOSES, pretrained_params=params,
+                          source_pool=source, seed=1, trials_per_task=32)
     results = {}
     for strat in ("raw", "tenset-pretrain", "tenset-finetune", "moses"):
-        results[strat] = tune(tasks, "tpu_edge", strat, MOSES,
-                              trials_per_task=32, pretrained_params=params,
-                              source_pool=source, seed=1)
+        results[strat] = session.run(tasks, "tpu_edge", strat)
         r = results[strat]
         print(f"   {strat:16s} latency={r.model_latency * 1e3:7.3f}ms "
               f"search={r.total_search_seconds:7.1f}s "

@@ -1,5 +1,6 @@
-from repro.autotune import (dataset, devices, evolution, registry, space,
-                            tasks, tuner)
+from repro.autotune import (dataset, devices, evolution, registry, session,
+                            space, tasks, tuner)
+from repro.autotune.session import TuneSession
 
-__all__ = ["dataset", "devices", "evolution", "registry", "space", "tasks",
-           "tuner"]
+__all__ = ["dataset", "devices", "evolution", "registry", "session", "space",
+           "tasks", "tuner", "TuneSession"]

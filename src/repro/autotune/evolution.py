@@ -10,7 +10,7 @@ import numpy as np
 from repro.autotune.space import (ProgramConfig, Workload, crossover,
                                   enumerate_space_size, mutate_config,
                                   random_config)
-from repro.core.features import extract_features
+from repro.core.features import FeatureCache, extract_features
 
 
 def evolutionary_search(
@@ -24,9 +24,15 @@ def evolutionary_search(
     eps_greedy: float = 0.05,
     seen: Set[Tuple] = None,
     seed_configs: Sequence[ProgramConfig] = (),
+    feature_cache: FeatureCache = None,
 ) -> List[ProgramConfig]:
     """Returns top_k candidate configs (deduped against `seen`). May return
-    fewer than top_k when the space is (nearly) exhausted."""
+    fewer than top_k when the space is (nearly) exhausted.
+
+    When `feature_cache` is given, per-config features are memoized through
+    it — survivors re-scored across rounds (and re-visited in later tuner
+    rounds sharing the cache) are extracted once.
+    """
     seen = seen if seen is not None else set()
     space_size = enumerate_space_size(wl)
     top_k = min(top_k, max(space_size - len(seen), 0))
@@ -37,7 +43,10 @@ def evolutionary_search(
         pop.append(random_config(wl, rng))
 
     def scores_of(cfgs):
-        feats = np.stack([extract_features(wl, c) for c in cfgs])
+        if feature_cache is not None:
+            feats = feature_cache.features_batch(wl, cfgs)
+        else:
+            feats = np.stack([extract_features(wl, c) for c in cfgs])
         return score_fn(feats)
 
     for _ in range(rounds):

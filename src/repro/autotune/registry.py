@@ -28,12 +28,16 @@ class Registry:
             with open(self.path) as f:
                 self._data = json.load(f)
 
+    def _put_unlocked(self, device: str, wl: Workload, cfg: ProgramConfig,
+                      throughput: float):
+        dev = self._data.setdefault(device, {})
+        dev[wl.key()] = {"knobs": dict(cfg.knobs),
+                         "throughput_gflops": throughput}
+
     def put(self, device: str, wl: Workload, cfg: ProgramConfig,
             throughput: float):
         with _LOCK:
-            dev = self._data.setdefault(device, {})
-            dev[wl.key()] = {"knobs": dict(cfg.knobs),
-                             "throughput_gflops": throughput}
+            self._put_unlocked(device, wl, cfg, throughput)
 
     def get(self, device: str, wl: Workload) -> ProgramConfig:
         entry = self._data.get(device, {}).get(wl.key())
@@ -52,7 +56,21 @@ class Registry:
             os.replace(tmp, self.path)
 
     def ingest(self, result) -> None:
-        """Ingest a TuneResult."""
+        """Ingest a TuneResult, keeping the better config on key collisions
+        (a TuneSession may tune the same workload under several strategies).
+        The compare-and-put is atomic under the registry lock."""
         for t in result.tasks:
-            self.put(result.device, t.workload, t.best_config,
-                     t.best_throughput)
+            with _LOCK:
+                prev = self._data.get(result.device, {}).get(t.workload.key())
+                if (prev is not None
+                        and prev["throughput_gflops"] >= t.best_throughput):
+                    continue
+                self._put_unlocked(result.device, t.workload, t.best_config,
+                                   t.best_throughput)
+
+    def ingest_many(self, results, save: bool = False) -> None:
+        """Ingest several TuneResults (e.g. `TuneSession.results`)."""
+        for r in results:
+            self.ingest(r)
+        if save:
+            self.save()

@@ -1,0 +1,131 @@
+"""TuneSession: orchestrates multiple (device, strategy) tuning jobs.
+
+Every consumer of the tuner — the paper-figure benchmarks, the examples, the
+kernel-registry autotune path — needs the same setup: a pretrained cost
+model + source record pool shared across jobs, a deterministic-but-isolated
+RNG seed per job, per-strategy knob overrides, and optional persistence of
+winners into the tuned-config `Registry`. TuneSession owns that boilerplate
+once so callers submit jobs instead of re-plumbing `tune(...)` arguments.
+
+RNG isolation: with `isolate_rng=True` (default) each job's seed is derived
+by hashing (session seed, device, strategy, salt), so
+
+  * two jobs in one session never share an RNG stream (no hidden coupling
+    through np.random state or seed arithmetic collisions), and
+  * a job's stream is independent of submission order — re-running a single
+    (device, strategy) cell reproduces exactly what the full matrix ran.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.autotune.registry import Registry
+from repro.autotune.space import Workload
+from repro.autotune.tuner import STRATEGIES, TuneResult, tune
+from repro.configs.moses import DEFAULT as DEFAULT_CFG
+from repro.configs.moses import MosesConfig
+from repro.core.cost_model import Records
+
+PyTree = Any
+
+
+def derive_job_seed(base_seed: int, device: str, strategy: str,
+                    salt: str = "") -> int:
+    """Stable, order-independent per-job seed (md5 of the job identity)."""
+    ident = f"{base_seed}|{device}|{strategy}|{salt}"
+    return int(hashlib.md5(ident.encode()).hexdigest()[:8], 16) % (2 ** 31 - 1)
+
+
+@dataclasses.dataclass
+class TuneSession:
+    """Shared context for a batch of tuning jobs.
+
+    Attributes:
+      moses_cfg: hyperparameters shared by every job (per-job overrides go
+        through `run(..., ratio_override=...)` etc.).
+      pretrained_params: source-device cost-model parameters. Shared by
+        reference — `tune()` deep-copies before mutating, so jobs never
+        observe each other's online updates.
+      source_pool: source-device records for Moses' adversarial term.
+      seed: session base seed; per-job seeds derive from it (see
+        `derive_job_seed`) unless `isolate_rng=False`, in which case every
+        job receives `seed` verbatim (the legacy behavior).
+      trials_per_task: default measurement budget per task; overridable per
+        job.
+      registry: when set, every finished job's best configs are ingested
+        (call `registry.save()` yourself when you want them persisted).
+
+    Example:
+        session = TuneSession(moses_cfg=MCFG, pretrained_params=params,
+                              source_pool=src, seed=1)
+        res = session.run(tasks, "tpu_edge", "moses")
+        matrix = session.run_matrix({"squeezenet": tasks}, {"TX2": "tpu_edge"},
+                                    ("tenset-finetune", "moses"))
+    """
+
+    moses_cfg: MosesConfig = dataclasses.field(
+        default_factory=lambda: DEFAULT_CFG)
+    pretrained_params: Optional[PyTree] = None
+    source_pool: Optional[Records] = None
+    seed: int = 0
+    trials_per_task: Optional[int] = None
+    registry: Optional[Registry] = None
+    isolate_rng: bool = True
+    results: List[TuneResult] = dataclasses.field(default_factory=list)
+
+    def job_seed(self, device: str, strategy: str, salt: str = "") -> int:
+        if not self.isolate_rng:
+            return self.seed
+        return derive_job_seed(self.seed, device, strategy, salt)
+
+    def run(self, tasks: Sequence[Workload], device: str, strategy: str,
+            trials_per_task: Optional[int] = None, salt: str = "",
+            **tune_kwargs) -> TuneResult:
+        """Run one tuning job; extra kwargs flow through to `tune()`
+        (e.g. ratio_override=, cross_task=, model_update_cost=)."""
+        assert strategy in STRATEGIES, strategy
+        trials = (trials_per_task if trials_per_task is not None
+                  else self.trials_per_task
+                  if self.trials_per_task is not None
+                  else self.moses_cfg.small_trials)
+        result = tune(
+            tasks, device, strategy, self.moses_cfg,
+            trials_per_task=trials,
+            pretrained_params=self.pretrained_params,
+            source_pool=self.source_pool,
+            seed=self.job_seed(device, strategy, salt),
+            **tune_kwargs)
+        self.results.append(result)
+        if self.registry is not None:
+            self.registry.ingest(result)
+        return result
+
+    def run_matrix(self, task_sets: Dict[str, Sequence[Workload]],
+                   devices: Dict[str, str],
+                   strategies: Sequence[str] = STRATEGIES,
+                   trials_per_task: Optional[int] = None,
+                   ratio_override: Optional[float] = None,
+                   progress: bool = False,
+                   ) -> Dict[str, Dict[str, TuneResult]]:
+        """The benchmark grid: results[f"{set}|{role}"][strategy].
+
+        `devices` maps a display role (the paper's device name) to a
+        simulated device id; `ratio_override` applies to the moses strategy
+        only (the Fig. 6 ablation knob).
+        """
+        out: Dict[str, Dict[str, TuneResult]] = {}
+        for set_name, tasks in task_sets.items():
+            for role, device in devices.items():
+                key = f"{set_name}|{role}"
+                out[key] = {}
+                for strat in strategies:
+                    if progress:
+                        print(f"  [{key}] {strat} ...", flush=True)
+                    out[key][strat] = self.run(
+                        tasks, device, strat,
+                        trials_per_task=trials_per_task, salt=set_name,
+                        ratio_override=(ratio_override if strat == "moses"
+                                        else None))
+        return out

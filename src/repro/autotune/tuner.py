@@ -13,6 +13,13 @@ Search-time accounting mirrors the paper: on-device measurement dominates, so
 search_time = sum(measurement_seconds) + small per-round model-update cost.
 The AC module (moses only) truncates the measurement phase when the cost
 model's CV stabilizes.
+
+Hot path (see docs/architecture.md): each task owns a FeatureCache (every
+distinct config featurized once) and a RecordsBuilder (records appended
+incrementally, labels re-normalized per snapshot); all scoring goes through
+`batched_predict`, whose bucket padding keeps every call on one compiled
+forward. Use `autotune.session.TuneSession` to run several (device,
+strategy) jobs over shared pretrained params.
 """
 from __future__ import annotations
 
@@ -31,9 +38,9 @@ from repro.autotune.space import (ProgramConfig, Workload, default_config,
 from repro.configs.moses import MosesConfig
 from repro.core.ac import ACState, AdaptiveController
 from repro.core.adaptation import MosesAdapter
-from repro.core.cost_model import (Records, init_mlp_params, normalize_per_task,
-                                   predict, train_cost_model)
-from repro.core.features import extract_features
+from repro.core.cost_model import (Records, RecordsBuilder, batched_predict,
+                                   init_mlp_params, train_cost_model)
+from repro.core.features import FeatureCache
 
 STRATEGIES = ("raw", "ansor-random", "tenset-pretrain", "tenset-finetune",
               "moses")
@@ -118,7 +125,12 @@ def tune(
         seen: set = set()
         measured: List[Tuple[ProgramConfig, float]] = []
         traj: List[float] = []
+        best_thr = float("-inf")    # running best-so-far for the trajectory
         search_s = 0.0
+        # per-task feature cache + incremental record builder: every config a
+        # scoring or training pass touches is featurized exactly once
+        cache = FeatureCache()
+        builder = RecordsBuilder()
 
         if strategy == "raw":
             cfg = default_config(wl)
@@ -130,7 +142,7 @@ def tune(
         def score_fn(feats: np.ndarray) -> np.ndarray:
             if params is None:
                 return rng.rand(len(feats))
-            return predict(params, feats)
+            return batched_predict(params, feats)
 
         # measurement plan
         if strategy == "moses":
@@ -155,8 +167,6 @@ def tune(
                 if cc is not None and cc.knobs not in seen:
                     warm_seeds.append(cc)
 
-        new_records: List[Records] = []
-
         for bi, bsz in enumerate(batch_sizes):
             cands = evolutionary_search(
                 wl, score_fn, rng,
@@ -165,35 +175,36 @@ def tune(
                 mutation_prob=moses_cfg.mutation_prob,
                 top_k=bsz, eps_greedy=moses_cfg.eps_greedy, seen=seen,
                 seed_configs=(warm_seeds if (bi == 0 and not measured) else [])
-                + [c for c, _ in sorted(measured, key=lambda t: -t[1])[:8]])
+                + [c for c, _ in sorted(measured, key=lambda t: -t[1])[:8]],
+                feature_cache=cache)
             if not cands:  # config space exhausted
                 break
-            feats = np.stack([extract_features(wl, c) for c in cands])
+            feats = cache.features_batch(wl, cands)
             thr = np.array([dev_mod.measure(wl, c, device, trial=bi)
                             for c in cands], np.float32)
-            for c, t in zip(cands, thr):
+            for c, t, f in zip(cands, thr, feats):
                 measured.append((c, float(t)))
-                best = max(m[1] for m in measured)
-                traj.append(best)
+                builder.append(f, float(t))
+                best_thr = max(best_thr, float(t))
+                traj.append(best_thr)
             search_s += sum(dev_mod.measurement_seconds(wl, c, device)
                             for c in cands)
 
-            # online model update
-            raw = np.array([t for _, t in measured], np.float32)
-            g = np.zeros(len(raw), np.int32)
-            rec = Records(
-                x=np.stack([extract_features(wl, c) for c, _ in measured]),
-                y=normalize_per_task(raw, g), g=g, raw_throughput=raw)
+            # online model update on the incremental record set (features were
+            # extracted once at measurement time; only labels re-normalize);
+            # snapshot only for strategies that train on it
             if strategy in ("ansor-random", "tenset-finetune"):
-                params, _ = train_cost_model(params, rec, cm_cfg,
+                params, _ = train_cost_model(params, builder.snapshot(),
+                                             cm_cfg,
                                              epochs=moses_cfg.online_epochs,
-                                             seed=seed + bi)
+                                             seed=seed + bi, pad=True)
                 search_s += model_update_cost
             elif strategy == "moses":
-                adapter.adapt(rec, epochs=moses_cfg.online_epochs)
+                adapter.adapt(builder.snapshot(),
+                              epochs=moses_cfg.online_epochs)
                 params = adapter.params
                 search_s += model_update_cost
-                preds = predict(params, feats)
+                preds = batched_predict(params, feats)
                 ac_state = ac.update(ac_state, preds)
                 if ac_state.terminated:
                     # early-terminate hardware measurement; remaining trials
@@ -207,15 +218,16 @@ def tune(
         if n_pred > 0 and params is not None:
             cands = evolutionary_search(
                 wl, score_fn, rng, population=moses_cfg.population_size,
-                rounds=moses_cfg.evolution_rounds, top_k=n_pred, seen=seen)
+                rounds=moses_cfg.evolution_rounds, top_k=n_pred, seen=seen,
+                feature_cache=cache)
             cands = cands or [default_config(wl)]
-            scores = predict(params, np.stack(
-                [extract_features(wl, c) for c in cands]))
+            scores = batched_predict(params, cache.features_batch(wl, cands))
             top = cands[int(np.argmax(scores))]
             # top-1 predicted config gets one confirmation measurement
             thr = dev_mod.measure(wl, top, device, trial=97)
             measured.append((top, float(thr)))
-            traj.append(max(m[1] for m in measured))
+            best_thr = max(best_thr, float(thr))
+            traj.append(best_thr)
             search_s += dev_mod.measurement_seconds(wl, top, device)
 
         best_cfg, _ = max(measured, key=lambda t: t[1])

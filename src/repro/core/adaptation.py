@@ -62,16 +62,25 @@ def _gr_bwd(_, g):
 grad_reverse.defvjp(_gr_fwd, _gr_bwd)
 
 
+def _masked_mean(vals: jax.Array, valid: Optional[jax.Array]) -> jax.Array:
+    if valid is None:
+        return jnp.mean(vals)
+    return (vals * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
 def _adaptation_loss(params, disc, batch_t, batch_s, rng, beta, n_pairs):
     """Ranking loss on target records + adversarial invariant loss (Eq. 6).
 
     The discriminator is trained to tell source-hidden from target-hidden;
     the cost model sees the REVERSED gradient so its surviving (invariant)
     parameters learn representations the discriminator cannot separate.
+    Batches may be bucket-padded (mask under key "m"); padded rows contribute
+    to neither the ranking nor the adversarial terms.
     """
     scores_t, hidden_t = mlp_forward(params, batch_t["x"], return_hidden=True)
+    m_t = batch_t.get("m")
     rank = pairwise_rank_loss(scores_t, batch_t["y"], batch_t["g"], rng,
-                              n_pairs)
+                              n_pairs, valid=m_t)
     adv = jnp.zeros(())
     if batch_s is not None and beta > 0:
         _, hidden_s = mlp_forward(params, batch_s["x"], return_hidden=True)
@@ -80,8 +89,9 @@ def _adaptation_loss(params, disc, batch_t, batch_s, rng, beta, n_pairs):
         logit_t = discriminator_logit(disc, grad_reverse(hidden_t))
         # labeling black-box b(): source=1, target=0 (Eq. 6 with entropy
         # coefficient beta on the target branch)
-        l_s = jnp.mean(jax.nn.softplus(-logit_s))          # -log b(.)
-        l_t = jnp.mean(jax.nn.softplus(logit_t))           # -log(1 - b(.))
+        l_s = _masked_mean(jax.nn.softplus(-logit_s),
+                           batch_s.get("m"))               # -log b(.)
+        l_t = _masked_mean(jax.nn.softplus(logit_t), m_t)  # -log(1 - b(.))
         adv = l_s + beta * l_t
     return rank + adv, (rank, adv)
 
@@ -161,8 +171,16 @@ class MosesAdapter:
                 "y": jnp.asarray(self.source_pool.y[idx]),
                 "g": jnp.asarray(self.source_pool.g[idx])}
 
-    def adapt(self, target_records: Records, epochs: Optional[int] = None):
-        """Run lottery-ticket adaptation phases on the target records."""
+    def adapt(self, target_records: Records, epochs: Optional[int] = None,
+              pad: bool = True):
+        """Run lottery-ticket adaptation phases on the target records.
+
+        pad=True (default) bucket-pads target minibatches so `_adapt_phase`
+        compiles once per shape bucket — the online tuning loop calls adapt()
+        with a record set that grows every round, which otherwise forces a
+        fresh XLA trace per round. Padded rows are masked out of every loss
+        term (see `_adaptation_loss`).
+        """
         cfg = self.cfg
         n_epochs = epochs if epochs is not None else cfg.adaptation_epochs
         bs = cfg.cost_model.batch_size
@@ -170,7 +188,7 @@ class MosesAdapter:
         ratio = (self.ratio_override if self.ratio_override is not None
                  else cfg.transferable_ratio)
         for _ in range(n_epochs):
-            for batch_t in target_records.batches(bs, rng_np):
+            for batch_t in target_records.batches(bs, rng_np, pad=pad):
                 self.rng, sub = jax.random.split(self.rng)
                 batch_s = self._source_batch(len(batch_t["x"]))
                 (self.params, self.disc, self.opt, self.disc_opt, loss, rank,

@@ -54,33 +54,81 @@ def mlp_forward(params: PyTree, x: jax.Array,
 
 def pairwise_rank_loss(scores: jax.Array, labels: jax.Array,
                        group_ids: jax.Array, rng: jax.Array,
-                       n_pairs: int = 2048) -> jax.Array:
+                       n_pairs: int = 2048,
+                       valid: Optional[jax.Array] = None) -> jax.Array:
     """Pairwise logistic ranking loss within task groups.
 
-    scores/labels: [B]; group_ids: [B] int (task index of each record).
+    scores/labels: [B]; group_ids: [B] int (task index of each record);
+    valid: optional [B] {0,1} mask — padded rows (from bucket-padded batches)
+    carry 0 and never contribute a pair.
     """
     B = scores.shape[0]
     k1, k2 = jax.random.split(rng)
     ii = jax.random.randint(k1, (n_pairs,), 0, B)
     jj = jax.random.randint(k2, (n_pairs,), 0, B)
+    if valid is not None:
+        # bucket padding appends pad rows at the END (see Records.batches /
+        # pad_rows); fold sampled indices onto the real prefix so the full
+        # n_pairs budget lands on real rows instead of being mask-diluted by
+        # up to (B/n_real)^2. Modulo is slightly non-uniform when B % n != 0,
+        # but rows are freshly shuffled every batch, so no row is favored.
+        n_real = jnp.maximum(valid.astype(jnp.int32).sum(), 1)
+        ii = ii % n_real
+        jj = jj % n_real
     same = (group_ids[ii] == group_ids[jj]) & (ii != jj)
     sign = jnp.sign(labels[ii] - labels[jj])
     margin = (scores[ii] - scores[jj]) * sign
     per_pair = jax.nn.softplus(-margin)
     w = same.astype(jnp.float32) * (sign != 0)
+    if valid is not None:
+        w = w * valid[ii] * valid[jj]
     return (per_pair * w).sum() / jnp.maximum(w.sum(), 1.0)
 
 
-def mse_loss(scores, labels, group_ids=None, rng=None, n_pairs=None):
-    return jnp.mean(jnp.square(scores - labels))
+def mse_loss(scores, labels, group_ids=None, rng=None, n_pairs=None,
+             valid=None):
+    err = jnp.square(scores - labels)
+    if valid is not None:
+        return (err * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+    return jnp.mean(err)
 
 
 def model_loss(params, batch, rng, loss_kind: str = "rank",
                n_pairs: int = 2048):
     scores = mlp_forward(params, batch["x"])
+    valid = batch.get("m")
     if loss_kind == "rank":
-        return pairwise_rank_loss(scores, batch["y"], batch["g"], rng, n_pairs)
-    return mse_loss(scores, batch["y"])
+        return pairwise_rank_loss(scores, batch["y"], batch["g"], rng, n_pairs,
+                                  valid=valid)
+    return mse_loss(scores, batch["y"], valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets: pad variable-length batches to a few fixed sizes so every
+# jitted function (scoring forward, loss-and-grad, adaptation phase) compiles
+# once per bucket instead of once per distinct batch length. The tuning loop
+# produces a new length almost every round (measured set grows by top_k each
+# time), which without bucketing re-triggers XLA compilation in the hot path.
+# ---------------------------------------------------------------------------
+
+SHAPE_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def bucket_size(n: int) -> int:
+    """Smallest bucket >= n (multiples of the largest bucket past the end)."""
+    for b in SHAPE_BUCKETS:
+        if n <= b:
+            return b
+    top = SHAPE_BUCKETS[-1]
+    return ((n + top - 1) // top) * top
+
+
+def pad_rows(x: np.ndarray, n_to: int) -> np.ndarray:
+    """Zero-pad a [N, ...] array to [n_to, ...] rows."""
+    if len(x) == n_to:
+        return x
+    pad = np.zeros((n_to - len(x),) + x.shape[1:], x.dtype)
+    return np.concatenate([x, pad])
 
 
 # ---------------------------------------------------------------------------
@@ -108,13 +156,59 @@ class Records:
             np.concatenate([r.g for r in rs]),
         )
 
-    def batches(self, batch_size: int, rng: np.random.RandomState):
+    def batches(self, batch_size: int, rng: np.random.RandomState,
+                pad: bool = False):
+        """Shuffled minibatches. With pad=True each batch is zero-padded to a
+        fixed bucket length (see SHAPE_BUCKETS) and carries an "m" {0,1} mask
+        (padded rows get group id -1 and mask 0) so jitted consumers see a
+        handful of stable shapes instead of one per batch length."""
         idx = rng.permutation(len(self.x))
         for s in range(0, len(idx), batch_size):
             sel = idx[s: s + batch_size]
-            yield {"x": jnp.asarray(self.x[sel]),
-                   "y": jnp.asarray(self.y[sel]),
-                   "g": jnp.asarray(self.g[sel])}
+            x, y, g = self.x[sel], self.y[sel], self.g[sel]
+            m = np.ones(len(sel), np.float32)
+            if pad:
+                b = bucket_size(len(sel))
+                x, y, m = pad_rows(x, b), pad_rows(y, b), pad_rows(m, b)
+                g = np.concatenate(
+                    [g, np.full(b - len(sel), -1, g.dtype)])
+            yield {"x": jnp.asarray(x), "y": jnp.asarray(y),
+                   "g": jnp.asarray(g), "m": jnp.asarray(m)}
+
+
+class RecordsBuilder:
+    """Incremental `Records` accumulator for the online tuning loop.
+
+    The tuner measures a handful of new configs per round; rebuilding the full
+    `Records` from `(config, throughput)` pairs each round re-extracts every
+    feature vector — O(n^2) `extract_features` calls per task over a tuning
+    run. The builder instead appends pre-extracted feature rows once and
+    re-derives only the per-task normalized labels (a cheap O(n) vector op,
+    since the running max can shift) on `snapshot()`.
+    """
+
+    def __init__(self):
+        self._x: List[np.ndarray] = []
+        self._raw: List[float] = []
+        self._g: List[int] = []
+
+    def __len__(self) -> int:
+        return len(self._x)
+
+    def append(self, feats: np.ndarray, raw_throughput: float,
+               group: int = 0) -> None:
+        """Add one measured record: its feature row and raw throughput."""
+        self._x.append(np.asarray(feats, np.float32))
+        self._raw.append(float(raw_throughput))
+        self._g.append(int(group))
+
+    def snapshot(self) -> Records:
+        """Materialize a `Records` view with fresh per-task normalization."""
+        assert self._x, "snapshot() of an empty builder"
+        raw = np.asarray(self._raw, np.float32)
+        g = np.asarray(self._g, np.int32)
+        return Records(x=np.stack(self._x), y=normalize_per_task(raw, g),
+                       g=g, raw_throughput=raw)
 
 
 def normalize_per_task(raw: np.ndarray, groups: np.ndarray) -> np.ndarray:
@@ -166,15 +260,20 @@ def _loss_and_grad(params, batch, rng, loss_kind, n_pairs):
 
 def train_cost_model(params: PyTree, records: Records, cfg: CostModelConfig,
                      epochs: Optional[int] = None, lr: Optional[float] = None,
-                     seed: int = 0) -> Tuple[PyTree, List[float]]:
-    """Vanilla full-parameter training (pre-training & baseline fine-tuning)."""
+                     seed: int = 0, pad: bool = False
+                     ) -> Tuple[PyTree, List[float]]:
+    """Vanilla full-parameter training (pre-training & baseline fine-tuning).
+
+    pad=True bucket-pads minibatches (see Records.batches) — use it for the
+    online-update path where the record count changes every tuning round.
+    """
     rng_np = np.random.RandomState(seed)
     key = jax.random.PRNGKey(seed)
     opt = adam_init(params)
     losses = []
     for ep in range(epochs if epochs is not None else cfg.max_epochs):
         ep_loss, nb = 0.0, 0
-        for batch in records.batches(cfg.batch_size, rng_np):
+        for batch in records.batches(cfg.batch_size, rng_np, pad=pad):
             key, sub = jax.random.split(key)
             loss, grads = _loss_and_grad(params, batch, sub, cfg.loss,
                                          cfg.rank_pairs_per_batch)
@@ -186,8 +285,34 @@ def train_cost_model(params: PyTree, records: Records, cfg: CostModelConfig,
     return params, losses
 
 
+_forward_jit = jax.jit(mlp_forward)
+
+
 def predict(params: PyTree, x: np.ndarray) -> np.ndarray:
-    return np.asarray(mlp_forward(params, jnp.asarray(x)))
+    """Reference scoring path: jitted forward at the batch's exact shape.
+
+    Compiles once per distinct batch length, so a loop that feeds it
+    ever-growing batches (the old tuner) retraces constantly — use
+    `batched_predict` in hot paths. Kept as the numerical reference the
+    batched path is tested against (rows are independent, so the two agree
+    bit-for-bit)."""
+    return np.asarray(_forward_jit(params, jnp.asarray(x)))
+
+
+def batched_predict(params: PyTree, x: np.ndarray) -> np.ndarray:
+    """Shape-stable, jitted scoring path: returns `predict(params, x)` but
+    pads the batch to a fixed bucket length first (rows are independent in the
+    MLP, so padding rows are sliced off after the forward). Every caller —
+    evolutionary search, the AC's prediction-only trials, online-update
+    scoring — therefore hits the same compiled function per bucket instead of
+    retracing per batch length."""
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    if n == 0:
+        return np.zeros((0,), np.float32)
+    scores = np.asarray(_forward_jit(params, jnp.asarray(
+        pad_rows(x, bucket_size(n)))))
+    return scores[:n]
 
 
 def rank_correlation(params: PyTree, records: Records) -> float:

@@ -21,11 +21,14 @@ All features are functions of (workload, config) only — hardware-independent
 from __future__ import annotations
 
 import math
-from typing import Dict
+from typing import TYPE_CHECKING, Dict
 
 import numpy as np
 
-from repro.autotune.space import ProgramConfig, Workload, vmem_working_set
+if TYPE_CHECKING:  # runtime import is deferred: repro.autotune's package
+    # __init__ imports modules that import this one back, so a module-level
+    # `from repro.autotune.space import ...` here makes import order matter
+    from repro.autotune.space import ProgramConfig, Workload
 
 FEATURE_DIM = 164
 
@@ -43,6 +46,7 @@ def _put(vec: np.ndarray, idx: int, vals) -> int:
 
 
 def extract_features(wl: Workload, cfg: ProgramConfig) -> np.ndarray:
+    from repro.autotune.space import vmem_working_set
     v = np.zeros(FEATURE_DIM, np.float32)
     d = cfg.as_dict()
     b = wl.dtype_bytes
@@ -175,3 +179,60 @@ def extract_features(wl: Workload, cfg: ProgramConfig) -> np.ndarray:
 
 def batch_features(wls, cfgs) -> np.ndarray:
     return np.stack([extract_features(w, c) for w, c in zip(wls, cfgs)])
+
+
+class FeatureCache:
+    """Memoizes `extract_features` across the tuning loop.
+
+    The tuner evaluates the same configs many times per task — evolutionary
+    scoring revisits survivors every round, measured configs are re-featurized
+    for every online model update, and the AC prediction-only phase re-scores
+    the same frontier. The cache keys on ``(workload.key(), config.knobs)``
+    (both hashable and exact), so each distinct (task, config) pair is
+    extracted exactly once no matter how many scoring or training passes touch
+    it.
+
+    ``hits`` / ``misses`` are plain counters for tests and diagnostics;
+    ``misses`` equals the number of real `extract_features` calls made through
+    the cache.
+
+    Thread-compatibility: plain dict operations only — safe under CPython for
+    the single-threaded tuning loop; create one cache per `tune()` call (or
+    per `TuneSession` job) rather than sharing across threads.
+    """
+
+    def __init__(self, extractor=None):
+        # resolved at call time when None so monkeypatched
+        # `repro.core.features.extract_features` is honored (tests rely on it)
+        self._extractor = extractor
+        self._store: Dict[tuple, np.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def features(self, wl: Workload, cfg: ProgramConfig) -> np.ndarray:
+        """Features for one (workload, config); extracts at most once."""
+        key = (wl.key(), cfg.knobs)
+        f = self._store.get(key)
+        if f is None:
+            self.misses += 1
+            fn = self._extractor if self._extractor is not None \
+                else extract_features
+            f = fn(wl, cfg)
+            self._store[key] = f
+        else:
+            self.hits += 1
+        return f
+
+    def features_batch(self, wl: Workload, cfgs) -> np.ndarray:
+        """Stacked [N, FEATURE_DIM] features for configs of one workload."""
+        if not len(cfgs):
+            return np.zeros((0, FEATURE_DIM), np.float32)
+        return np.stack([self.features(wl, c) for c in cfgs])
+
+    def clear(self):
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0

@@ -1,8 +1,9 @@
 """Tests for the auto-tuning substrate: space, devices, evolution, features,
-tuner invariants. Includes hypothesis property tests."""
+tuner invariants. Includes hypothesis property tests (skipped when
+hypothesis is not installed; see _hypothesis_support)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.autotune import devices as dev_mod
 from repro.autotune.evolution import evolutionary_search
