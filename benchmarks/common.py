@@ -19,11 +19,11 @@ import numpy as np
 
 from repro.autotune.dataset import generate_records, training_task_pool
 from repro.autotune.session import TuneSession
+from repro.autotune.strategies import STRATEGIES
 from repro.autotune.tasks import PAPER_DNN_NAMES, paper_dnn_tasks
 from repro.autotune.tuner import TuneResult
 from repro.configs.moses import DEFAULT as MCFG
-from repro.core.cost_model import (Records, init_mlp_params,
-                                   train_cost_model)
+from repro.core.cost_model import Records, resolve_cost_model
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 CACHE = os.path.join(ART, "bench_cache")
@@ -32,8 +32,7 @@ SMALL_TRIALS = 32
 LARGE_TRIALS = 64
 TARGET_DEVICES = {"2060": "tpu_v5e", "TX2": "tpu_edge"}  # paper role -> sim
 DNNS = list(PAPER_DNN_NAMES)
-STRATS = ("raw", "ansor-random", "tenset-pretrain", "tenset-finetune",
-          "moses")
+STRATS = STRATEGIES  # registry order == the paper's Table 1 columns
 
 
 def pretrained_cost_model(seed: int = 0):
@@ -46,8 +45,9 @@ def pretrained_cost_model(seed: int = 0):
     pool = training_task_pool(include_archs=False)
     src = generate_records(pool, MCFG.source_device, programs_per_task=24,
                            seed=seed)
-    params = init_mlp_params(MCFG.cost_model, jax.random.PRNGKey(seed))
-    params, losses = train_cost_model(params, src, MCFG.cost_model, epochs=10)
+    model = resolve_cost_model("mlp", MCFG.cost_model)
+    params = model.init(jax.random.PRNGKey(seed))
+    params, losses = model.train(params, src, epochs=10)
     params = jax.device_get(params)
     blob = {"params": params, "source_records": src,
             "pretrain_losses": losses}
@@ -60,8 +60,10 @@ def _session_fingerprint(session: TuneSession) -> str:
     """Content digest of everything (besides seed/trials, keyed separately)
     that changes what a session's jobs compute: config, rng mode, pretrained
     parameter values, and the source-record pool."""
+    cm = session.cost_model
+    cm_key = cm if isinstance(cm, (str, type(None))) else cm.cache_key()
     h = hashlib.md5(
-        f"{repr(session.moses_cfg)}|{session.isolate_rng}".encode())
+        f"{repr(session.moses_cfg)}|{session.isolate_rng}|{cm_key}".encode())
     if session.pretrained_params is not None:
         for leaf in jax.tree.leaves(session.pretrained_params):
             h.update(np.asarray(leaf).tobytes())

@@ -27,7 +27,7 @@ from repro.autotune.tasks import arch_tasks  # noqa: E402
 from repro.autotune import devices as dev_mod  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.configs.moses import DEFAULT as MOSES  # noqa: E402
-from repro.core.cost_model import init_mlp_params, train_cost_model  # noqa: E402
+from repro.core.cost_model import resolve_cost_model  # noqa: E402
 from repro.kernels import ops, ref  # noqa: E402
 
 
@@ -48,15 +48,17 @@ def main():
     pool = training_task_pool(include_archs=False)
     src = generate_records(pool, MOSES.source_device, programs_per_task=24,
                            seed=0)
-    params = init_mlp_params(MOSES.cost_model, jax.random.PRNGKey(0))
-    params, _ = train_cost_model(params, src, MOSES.cost_model, epochs=10)
+    model = resolve_cost_model("mlp", MOSES.cost_model)
+    params = model.init(jax.random.PRNGKey(0))
+    params, _ = model.train(params, src, epochs=10)
     reg_path = os.path.join(tempfile.mkdtemp(prefix="repro_reg_"),
                             "tuned.json")
     reg = Registry(path=reg_path)
     # session jobs auto-ingest their winners into the registry
     session = TuneSession(moses_cfg=MOSES, pretrained_params=params,
                           source_pool=src, seed=0,
-                          trials_per_task=args.trials, registry=reg)
+                          trials_per_task=args.trials, registry=reg,
+                          cost_model=model)
     result = session.run(tasks, args.device, "moses")
     reg.save()
     ops.set_registry(Registry(path=reg_path))

@@ -18,27 +18,30 @@ from repro.autotune.dataset import generate_records, training_task_pool  # noqa:
 from repro.autotune.session import TuneSession  # noqa: E402
 from repro.autotune.tasks import paper_dnn_tasks  # noqa: E402
 from repro.configs.moses import DEFAULT as MOSES  # noqa: E402
-from repro.core.cost_model import (init_mlp_params, rank_correlation,  # noqa: E402
-                                   train_cost_model)
+from repro.core.cost_model import rank_correlation, resolve_cost_model  # noqa: E402
 from repro.core.metrics import summarize  # noqa: E402
 
 
 def main():
-    # 1. Offline: Tenset-style dataset on the source device + pre-training
+    # 1. Offline: Tenset-style dataset on the source device + pre-training.
+    # The cost model is a registered plugin — swap "mlp" for "residual-mlp"
+    # (or your own @register_cost_model class) and the rest is unchanged.
     print("== Step 1: pre-train cost model on source device (tpu_v5p) ==")
     pool = training_task_pool(include_archs=False)
     source = generate_records(pool, MOSES.source_device,
                               programs_per_task=24, seed=0)
-    params = init_mlp_params(MOSES.cost_model, jax.random.PRNGKey(0))
-    params, losses = train_cost_model(params, source, MOSES.cost_model,
-                                      epochs=10)
+    model = resolve_cost_model("mlp", MOSES.cost_model)
+    params = model.init(jax.random.PRNGKey(0))
+    params, losses = model.train(params, source, epochs=10)
     print(f"   pretrain rank loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
-          f"source rank-corr {rank_correlation(params, source):.3f}")
+          f"source rank-corr "
+          f"{rank_correlation(params, source, model.predict):.3f}")
 
     # 2. The transfer gap (paper §1: vanilla transfer fails across big gaps)
     far = generate_records(pool[:12], "tpu_edge", programs_per_task=24, seed=5)
     print(f"   rank-corr on tpu_edge WITHOUT adaptation: "
-          f"{rank_correlation(params, far):.3f}  <- the gap Moses closes")
+          f"{rank_correlation(params, far, model.predict):.3f}"
+          f"  <- the gap Moses closes")
 
     # 3. Online: tune SqueezeNet on the target under each strategy; the
     # TuneSession shares the pretrained model across jobs and gives each
@@ -46,7 +49,8 @@ def main():
     print("== Step 2: tune SqueezeNet on tpu_edge (paper Fig. 4/5 setting) ==")
     tasks = paper_dnn_tasks("squeezenet")
     session = TuneSession(moses_cfg=MOSES, pretrained_params=params,
-                          source_pool=source, seed=1, trials_per_task=32)
+                          source_pool=source, seed=1, trials_per_task=32,
+                          cost_model=model)
     results = {}
     for strat in ("raw", "tenset-pretrain", "tenset-finetune", "moses"):
         results[strat] = session.run(tasks, "tpu_edge", strat)

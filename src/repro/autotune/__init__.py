@@ -1,6 +1,9 @@
 from repro.autotune import (dataset, devices, evolution, registry, session,
-                            space, tasks, tuner)
+                            space, strategies, tasks, tuner)
 from repro.autotune.session import TuneSession
+from repro.autotune.strategies import (STRATEGIES, Strategy,
+                                       register_strategy, resolve_strategy)
 
 __all__ = ["dataset", "devices", "evolution", "registry", "session", "space",
-           "tasks", "tuner", "TuneSession"]
+           "strategies", "tasks", "tuner", "TuneSession", "STRATEGIES",
+           "Strategy", "register_strategy", "resolve_strategy"]

@@ -25,14 +25,28 @@ def evolutionary_search(
     seen: Set[Tuple] = None,
     seed_configs: Sequence[ProgramConfig] = (),
     feature_cache: FeatureCache = None,
+    cost_model=None,
+    params=None,
 ) -> List[ProgramConfig]:
     """Returns top_k candidate configs (deduped against `seen`). May return
     fewer than top_k when the space is (nearly) exhausted.
+
+    Scoring: pass a raw `score_fn`, or pass `score_fn=None` with
+    `cost_model` (+ its `params`) — any registered `CostModel` — and
+    candidates are ranked through `cost_model.batched_predict`. The search
+    itself never sees model internals either way.
 
     When `feature_cache` is given, per-config features are memoized through
     it — survivors re-scored across rounds (and re-visited in later tuner
     rounds sharing the cache) are extracted once.
     """
+    if score_fn is None:
+        assert cost_model is not None, "need score_fn or cost_model"
+        model_params = params
+
+        def score_fn(feats):
+            return cost_model.batched_predict(model_params, feats)
+
     seen = seen if seen is not None else set()
     space_size = enumerate_space_size(wl)
     top_k = min(top_k, max(space_size - len(seen), 0))

@@ -19,16 +19,19 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.autotune.registry import Registry
 from repro.autotune.space import Workload
-from repro.autotune.tuner import STRATEGIES, TuneResult, tune
+from repro.autotune.strategies import (STRATEGIES, Strategy, resolve_strategy,
+                                       strategy_name)
+from repro.autotune.tuner import TuneResult, tune
 from repro.configs.moses import DEFAULT as DEFAULT_CFG
 from repro.configs.moses import MosesConfig
-from repro.core.cost_model import Records
+from repro.core.cost_model import CostModel, Records, resolve_cost_model
 
 PyTree = Any
+StrategySpec = Union[str, Strategy]
 
 
 def derive_job_seed(base_seed: int, device: str, strategy: str,
@@ -56,6 +59,14 @@ class TuneSession:
         job.
       registry: when set, every finished job's best configs are ingested
         (call `registry.save()` yourself when you want them persisted).
+      cost_model: scoring-model family shared by every job — a registered
+        name ("mlp", "residual-mlp", ...) or a `CostModel` instance; None is
+        the paper default MLP. Per-job overrides go through
+        `run(..., cost_model=...)`.
+
+    Strategies are registered names or `Strategy` instances throughout —
+    `run(tasks, dev, "moses")` and `run(tasks, dev, MosesStrategy())` are
+    the same job (string resolution goes through the strategy registry).
 
     Example:
         session = TuneSession(moses_cfg=MCFG, pretrained_params=params,
@@ -73,23 +84,48 @@ class TuneSession:
     trials_per_task: Optional[int] = None
     registry: Optional[Registry] = None
     isolate_rng: bool = True
+    cost_model: Union[str, CostModel, None] = None
     results: List[TuneResult] = dataclasses.field(default_factory=list)
 
-    def job_seed(self, device: str, strategy: str, salt: str = "") -> int:
+    def resolved_cost_model(self) -> Union[CostModel, None]:
+        """Resolve `cost_model` ONCE and reuse the instance for every job:
+        a `CostModel`'s jitted traces are cached per instance, so handing
+        each `tune()` call a fresh instance would recompile the forward /
+        train / adapt functions per job. None stays None (tune() resolves
+        it to the default MLP, whose traces are module-level anyway)."""
+        spec = self.cost_model
+        if spec is None or isinstance(spec, CostModel):
+            return spec
+        cached = getattr(self, "_resolved_cm", None)
+        if cached is None or cached[0] != spec:
+            cached = (spec, resolve_cost_model(spec,
+                                               self.moses_cfg.cost_model))
+            self._resolved_cm = cached
+        return cached[1]
+
+    def job_seed(self, device: str, strategy: StrategySpec,
+                 salt: str = "") -> int:
+        """Seeds key on the strategy NAME, so a registered name and an
+        instance of the same strategy land on the same stream."""
         if not self.isolate_rng:
             return self.seed
-        return derive_job_seed(self.seed, device, strategy, salt)
+        return derive_job_seed(self.seed, device, strategy_name(strategy),
+                               salt)
 
-    def run(self, tasks: Sequence[Workload], device: str, strategy: str,
+    def run(self, tasks: Sequence[Workload], device: str,
+            strategy: StrategySpec,
             trials_per_task: Optional[int] = None, salt: str = "",
             **tune_kwargs) -> TuneResult:
         """Run one tuning job; extra kwargs flow through to `tune()`
-        (e.g. ratio_override=, cross_task=, model_update_cost=)."""
-        assert strategy in STRATEGIES, strategy
+        (e.g. ratio_override=, cross_task=, model_update_cost=,
+        cost_model=)."""
+        # resolve early so an unknown name fails here, not mid-matrix
+        strategy = resolve_strategy(strategy)
         trials = (trials_per_task if trials_per_task is not None
                   else self.trials_per_task
                   if self.trials_per_task is not None
                   else self.moses_cfg.small_trials)
+        tune_kwargs.setdefault("cost_model", self.resolved_cost_model())
         result = tune(
             tasks, device, strategy, self.moses_cfg,
             trials_per_task=trials,
@@ -104,12 +140,12 @@ class TuneSession:
 
     def run_matrix(self, task_sets: Dict[str, Sequence[Workload]],
                    devices: Dict[str, str],
-                   strategies: Sequence[str] = STRATEGIES,
+                   strategies: Sequence[StrategySpec] = STRATEGIES,
                    trials_per_task: Optional[int] = None,
                    ratio_override: Optional[float] = None,
                    progress: bool = False,
                    ) -> Dict[str, Dict[str, TuneResult]]:
-        """The benchmark grid: results[f"{set}|{role}"][strategy].
+        """The benchmark grid: results[f"{set}|{role}"][strategy-name].
 
         `devices` maps a display role (the paper's device name) to a
         simulated device id; `ratio_override` applies to the moses strategy
@@ -121,11 +157,12 @@ class TuneSession:
                 key = f"{set_name}|{role}"
                 out[key] = {}
                 for strat in strategies:
+                    name = strategy_name(strat)
                     if progress:
-                        print(f"  [{key}] {strat} ...", flush=True)
-                    out[key][strat] = self.run(
+                        print(f"  [{key}] {name} ...", flush=True)
+                    out[key][name] = self.run(
                         tasks, device, strat,
                         trials_per_task=trials_per_task, salt=set_name,
-                        ratio_override=(ratio_override if strat == "moses"
+                        ratio_override=(ratio_override if name == "moses"
                                         else None))
         return out

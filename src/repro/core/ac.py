@@ -44,6 +44,13 @@ class AdaptiveController:
         sizes = [base + (1 if i < t_train % q else 0) for i in range(q)]
         return [s for s in sizes if s > 0], t_pred
 
+    def observe(self, state: ACState, cost_model, params,
+                feats: np.ndarray) -> ACState:
+        """Score the latest measured batch with a `CostModel` and update the
+        CV state. The controller only ever sees scores — any registered model
+        family plugs in here without the AC knowing its internals."""
+        return self.update(state, cost_model.batched_predict(params, feats))
+
     def update(self, state: ACState, predictions: np.ndarray) -> ACState:
         """Feed the cost model's predictions on the latest measured batch."""
         state.batch_means.append(float(np.mean(predictions)))

@@ -24,8 +24,8 @@ import numpy as np
 
 from repro.configs.moses import MosesConfig
 from repro.core import lottery
-from repro.core.cost_model import (AdamState, Records, adam_init, mlp_forward,
-                                   pairwise_rank_loss)
+from repro.core.cost_model import (AdamState, CostModel, Records, adam_init,
+                                   mlp_forward, pairwise_rank_loss)
 
 PyTree = Any
 
@@ -68,22 +68,26 @@ def _masked_mean(vals: jax.Array, valid: Optional[jax.Array]) -> jax.Array:
     return (vals * valid).sum() / jnp.maximum(valid.sum(), 1.0)
 
 
-def _adaptation_loss(params, disc, batch_t, batch_s, rng, beta, n_pairs):
+def _adaptation_loss(params, disc, batch_t, batch_s, rng, beta, n_pairs,
+                     forward=None):
     """Ranking loss on target records + adversarial invariant loss (Eq. 6).
 
     The discriminator is trained to tell source-hidden from target-hidden;
     the cost model sees the REVERSED gradient so its surviving (invariant)
     parameters learn representations the discriminator cannot separate.
     Batches may be bucket-padded (mask under key "m"); padded rows contribute
-    to neither the ranking nor the adversarial terms.
+    to neither the ranking nor the adversarial terms. `forward` is the cost
+    model's network (defaults to the paper MLP) and must expose the hidden
+    representation the discriminator reads.
     """
-    scores_t, hidden_t = mlp_forward(params, batch_t["x"], return_hidden=True)
+    fwd = forward if forward is not None else mlp_forward
+    scores_t, hidden_t = fwd(params, batch_t["x"], return_hidden=True)
     m_t = batch_t.get("m")
     rank = pairwise_rank_loss(scores_t, batch_t["y"], batch_t["g"], rng,
                               n_pairs, valid=m_t)
     adv = jnp.zeros(())
     if batch_s is not None and beta > 0:
-        _, hidden_s = mlp_forward(params, batch_s["x"], return_hidden=True)
+        _, hidden_s = fwd(params, batch_s["x"], return_hidden=True)
         # gradient reversal on the featurizer side
         logit_s = discriminator_logit(disc, grad_reverse(hidden_s))
         logit_t = discriminator_logit(disc, grad_reverse(hidden_t))
@@ -96,13 +100,14 @@ def _adaptation_loss(params, disc, batch_t, batch_s, rng, beta, n_pairs):
     return rank + adv, (rank, adv)
 
 
-@partial(jax.jit, static_argnames=("beta", "n_pairs", "use_ratio"))
+@partial(jax.jit,
+         static_argnames=("beta", "n_pairs", "use_ratio", "forward"))
 def _adapt_phase(params, disc, opt: AdamState, disc_opt: AdamState,
                  batch_t, batch_s, rng, lr, ratio, theta, variant_decay,
-                 beta, n_pairs, use_ratio):
+                 beta, n_pairs, use_ratio, forward=None):
     (loss, (rank, adv)), grads = jax.value_and_grad(
         _adaptation_loss, argnums=(0, 1), has_aux=True)(
-        params, disc, batch_t, batch_s, rng, beta, n_pairs)
+        params, disc, batch_t, batch_s, rng, beta, n_pairs, forward)
     g_params, g_disc = grads
 
     # Eq. 5 mask from this phase's gradient flow
@@ -140,7 +145,12 @@ def _adapt_phase(params, disc, opt: AdamState, disc_opt: AdamState,
 
 @dataclasses.dataclass
 class MosesAdapter:
-    """Stateful wrapper used inside the tuning loop (one per target device)."""
+    """Stateful wrapper used inside the tuning loop (one per target device).
+
+    `cost_model` selects the scoring network the adaptation phases run
+    through (any `CostModel`); None keeps the paper MLP. The discriminator
+    is sized to the model's exposed hidden dimension either way.
+    """
     cfg: MosesConfig
     params: PyTree
     disc: PyTree = None
@@ -150,13 +160,22 @@ class MosesAdapter:
     rng: jax.Array = None
     history: List[dict] = dataclasses.field(default_factory=list)
     ratio_override: Optional[float] = None
+    cost_model: Optional[CostModel] = None
 
     def __post_init__(self):
+        # static forward threaded into the jitted adaptation phase; the MLP
+        # model resolves to None (the default path), keeping its trace shared
+        # with legacy callers that built the adapter without a cost_model
+        self._forward = (self.cost_model._static_forward()
+                         if self.cost_model is not None else None)
         if self.rng is None:
             self.rng = jax.random.PRNGKey(self.cfg.seed)
         if self.disc is None:
             self.rng, k = jax.random.split(self.rng)
-            self.disc = init_discriminator(k, self.cfg.cost_model.hidden_dims[-1])
+            hidden = (self.cost_model.hidden_dim
+                      if self.cost_model is not None
+                      else self.cfg.cost_model.hidden_dims[-1])
+            self.disc = init_discriminator(k, hidden)
         if self.opt is None:
             self.opt = adam_init(self.params)
         if self.disc_opt is None:
@@ -198,7 +217,7 @@ class MosesAdapter:
                     cfg.adaptation_lr, ratio, cfg.distill_threshold,
                     cfg.variant_weight_decay, cfg.adversarial_beta,
                     cfg.cost_model.rank_pairs_per_batch,
-                    cfg.use_ratio_ranking)
+                    cfg.use_ratio_ranking, self._forward)
                 self.history.append({
                     "loss": float(loss), "rank": float(rank),
                     "adv": float(adv), "mask_frac": float(frac)})

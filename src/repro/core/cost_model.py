@@ -1,4 +1,4 @@
-"""The cost model C(): MLP with two hidden layers x 512, ranking loss.
+"""The cost model C() and the pluggable `CostModel` interface.
 
 Paper §4.2: "the representative one used in Ansor, which is an MLP with two
 hidden layers, with 512 neurons for each. We train the MLP cost model with
@@ -8,12 +8,20 @@ core/adaptation.py).
 
 Labels are per-task-normalized throughputs (Ansor convention); the pairwise
 logistic ranking loss compares records within the same task.
+
+The paper treats the cost model as a swappable policy around a fixed search
+loop (TLP swaps in a schedule-sequence model, Pruner a draft-then-verify
+scorer) — so everything above this module talks to the `CostModel` interface
+at the bottom of the file, never to the MLP free functions directly. Register
+new families with `@register_cost_model("name")`; `tune()`/`TuneSession`
+resolve registered names or accept instances.
 """
 from __future__ import annotations
 
+import abc
 import dataclasses
 from functools import partial
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,8 +102,9 @@ def mse_loss(scores, labels, group_ids=None, rng=None, n_pairs=None,
 
 
 def model_loss(params, batch, rng, loss_kind: str = "rank",
-               n_pairs: int = 2048):
-    scores = mlp_forward(params, batch["x"])
+               n_pairs: int = 2048, forward: Callable = None):
+    fwd = forward if forward is not None else mlp_forward
+    scores = fwd(params, batch["x"])
     valid = batch.get("m")
     if loss_kind == "rank":
         return pairwise_rank_loss(scores, batch["y"], batch["g"], rng, n_pairs,
@@ -252,20 +261,23 @@ def adam_update(grads, state: AdamState, params, lr=1e-3, b1=0.9, b2=0.999,
     return new_params, AdamState(m, v, count)
 
 
-@partial(jax.jit, static_argnames=("loss_kind", "n_pairs"))
-def _loss_and_grad(params, batch, rng, loss_kind, n_pairs):
+@partial(jax.jit, static_argnames=("loss_kind", "n_pairs", "forward"))
+def _loss_and_grad(params, batch, rng, loss_kind, n_pairs, forward=None):
     return jax.value_and_grad(model_loss)(params, batch, rng, loss_kind,
-                                          n_pairs)
+                                          n_pairs, forward)
 
 
 def train_cost_model(params: PyTree, records: Records, cfg: CostModelConfig,
                      epochs: Optional[int] = None, lr: Optional[float] = None,
-                     seed: int = 0, pad: bool = False
+                     seed: int = 0, pad: bool = False,
+                     forward: Callable = None
                      ) -> Tuple[PyTree, List[float]]:
     """Vanilla full-parameter training (pre-training & baseline fine-tuning).
 
     pad=True bucket-pads minibatches (see Records.batches) — use it for the
     online-update path where the record count changes every tuning round.
+    `forward` swaps the scoring network (defaults to the paper's MLP); it must
+    be a stable hashable so the jitted loss-and-grad caches per network.
     """
     rng_np = np.random.RandomState(seed)
     key = jax.random.PRNGKey(seed)
@@ -276,7 +288,7 @@ def train_cost_model(params: PyTree, records: Records, cfg: CostModelConfig,
         for batch in records.batches(cfg.batch_size, rng_np, pad=pad):
             key, sub = jax.random.split(key)
             loss, grads = _loss_and_grad(params, batch, sub, cfg.loss,
-                                         cfg.rank_pairs_per_batch)
+                                         cfg.rank_pairs_per_batch, forward)
             params, opt = adam_update(grads, opt, params,
                                       lr=lr if lr is not None else cfg.lr)
             ep_loss += float(loss)
@@ -315,9 +327,13 @@ def batched_predict(params: PyTree, x: np.ndarray) -> np.ndarray:
     return scores[:n]
 
 
-def rank_correlation(params: PyTree, records: Records) -> float:
-    """Mean per-task Spearman-like rank agreement (top-1 regret proxy)."""
-    scores = predict(params, records.x)
+def rank_correlation(params: PyTree, records: Records,
+                     predict_fn: Callable = None) -> float:
+    """Mean per-task Spearman-like rank agreement (top-1 regret proxy).
+
+    `predict_fn` defaults to the MLP scoring path; pass
+    `cost_model.predict` to evaluate another registered model family."""
+    scores = (predict_fn or predict)(params, records.x)
     taus = []
     for g in np.unique(records.g):
         m = records.g == g
@@ -330,3 +346,206 @@ def rank_correlation(params: PyTree, records: Records) -> float:
         if np.isfinite(c):
             taus.append(c)
     return float(np.mean(taus)) if taus else 0.0
+
+
+# ---------------------------------------------------------------------------
+# CostModel interface + registry: the pluggable model-family boundary. The
+# tuner, session, MosesAdapter, AC, benchmarks and examples all talk to this
+# API; nothing above this module reaches the MLP free functions directly.
+# ---------------------------------------------------------------------------
+
+
+COST_MODELS: Dict[str, type] = {}
+
+
+def register_cost_model(name: str):
+    """Class decorator: register a `CostModel` subclass under `name` so
+    `tune(..., cost_model="name")` / `resolve_cost_model("name")` find it."""
+    def deco(cls):
+        cls.name = name
+        COST_MODELS[name] = cls
+        return cls
+    return deco
+
+
+def resolve_cost_model(spec=None, cfg: Optional[CostModelConfig] = None
+                       ) -> "CostModel":
+    """Resolve a registered name / instance / None into a `CostModel`.
+
+    None -> the paper default ("mlp"). Instances pass through untouched —
+    an instance's own cfg is authoritative and `cfg` here is IGNORED for it
+    (the instance defines the architecture its params were built with; the
+    caller must keep it consistent with any pretrained_params they pass).
+    `cfg` only configures models resolved from a name.
+    """
+    if isinstance(spec, CostModel):
+        return spec
+    if spec is None:
+        spec = "mlp"
+    if spec not in COST_MODELS:
+        raise KeyError(f"unknown cost model {spec!r}; registered: "
+                       f"{sorted(COST_MODELS)}")
+    return COST_MODELS[spec](cfg if cfg is not None else CostModelConfig())
+
+
+class CostModel(abc.ABC):
+    """The swappable scoring-model policy around the fixed search loop.
+
+    Params stay an explicit pytree (the lottery-ticket machinery masks raw
+    parameter updates), so every method is `params`-first and pure; the
+    instance carries only the architecture + config. `forward` must be
+    jax-traceable, stably hashable (it is jitted as a static argument), and
+    support `return_hidden=True` for the adversarial domain discriminator.
+    """
+
+    name = "abstract"
+
+    def __init__(self, cfg: Optional[CostModelConfig] = None):
+        self.cfg = cfg if cfg is not None else CostModelConfig()
+        self._fwd_jit = None
+
+    # --- architecture -----------------------------------------------------
+    @abc.abstractmethod
+    def init(self, rng: jax.Array) -> PyTree:
+        """Fresh parameters from a PRNG key."""
+
+    @abc.abstractmethod
+    def forward(self, params: PyTree, x: jax.Array,
+                return_hidden: bool = False):
+        """x: [B, F] -> scores [B] (+ last hidden layer when asked)."""
+
+    @property
+    def hidden_dim(self) -> int:
+        """Width of the hidden representation `forward` exposes (the
+        adversarial discriminator's input dimension)."""
+        return self.cfg.hidden_dims[-1]
+
+    def cache_key(self) -> str:
+        """Content key for result caches: must change whenever the model
+        would score differently. Covers every constructor argument beyond
+        `cfg` via __dict__ (subclasses with non-init state should
+        override)."""
+        extra = {k: v for k, v in sorted(self.__dict__.items())
+                 if not k.startswith("_") and k != "cfg"}
+        return f"{self.name}|{repr(self.cfg)}|{extra}"
+
+    # --- scoring ----------------------------------------------------------
+    def _jitted_forward(self):
+        if self._fwd_jit is None:
+            self._fwd_jit = jax.jit(partial(self.forward))
+        return self._fwd_jit
+
+    def predict(self, params: PyTree, x: np.ndarray) -> np.ndarray:
+        """Exact-shape scoring (compiles per batch length; test reference)."""
+        return np.asarray(self._jitted_forward()(params, jnp.asarray(x)))
+
+    def batched_predict(self, params: PyTree, x: np.ndarray) -> np.ndarray:
+        """Bucket-padded scoring: one compiled forward per SHAPE_BUCKET."""
+        x = np.asarray(x, np.float32)
+        n = len(x)
+        if n == 0:
+            return np.zeros((0,), np.float32)
+        scores = np.asarray(self._jitted_forward()(
+            params, jnp.asarray(pad_rows(x, bucket_size(n)))))
+        return scores[:n]
+
+    # --- training / lifecycle ---------------------------------------------
+    def train(self, params: PyTree, records: Records,
+              epochs: Optional[int] = None, lr: Optional[float] = None,
+              seed: int = 0, pad: bool = False) -> Tuple[PyTree, List[float]]:
+        """Adam + ranking loss over `records`; returns (params, losses)."""
+        return train_cost_model(params, records, self.cfg, epochs=epochs,
+                                lr=lr, seed=seed, pad=pad,
+                                forward=self._static_forward())
+
+    def _static_forward(self):
+        """Hashable forward handed to jitted trainers (bound methods hash by
+        (function, instance), so each model instance caches its own trace)."""
+        return self.forward
+
+    def clone_params(self, params: PyTree) -> PyTree:
+        """Deep copy, so strategies never mutate shared pretrained params."""
+        return jax.tree.map(lambda a: jnp.array(a), params)
+
+    def save(self, params: PyTree, path: str) -> None:
+        """Persist a flat-dict param pytree as .npz."""
+        np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+    def load(self, path: str) -> PyTree:
+        with np.load(path) as z:
+            return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+@register_cost_model("mlp")
+class MLPCostModel(CostModel):
+    """Paper §4.2 default: the Ansor MLP (2x512, ranking loss).
+
+    Delegates to the module-level free functions — same jit cache, so going
+    through the interface is bit-identical to calling them directly (the
+    string-strategy parity test relies on this).
+    """
+
+    def init(self, rng: jax.Array) -> PyTree:
+        return init_mlp_params(self.cfg, rng)
+
+    def forward(self, params, x, return_hidden: bool = False):
+        return mlp_forward(params, x, return_hidden=return_hidden)
+
+    def _static_forward(self):
+        # the plain function, not the bound method: identical jit cache key
+        # to legacy `train_cost_model(...)` calls (forward=None default path
+        # shares traces only when the static arg matches)
+        return None
+
+    def predict(self, params, x):
+        return predict(params, x)
+
+    def batched_predict(self, params, x):
+        return batched_predict(params, x)
+
+
+@register_cost_model("residual-mlp")
+class ResidualMLPCostModel(CostModel):
+    """Deeper residual scorer proving the `CostModel` API (TLP/Pruner-style
+    swap): input projection to `width`, `depth` residual ReLU blocks, linear
+    head. Narrower than the paper MLP by default, so it doubles as a cheap
+    draft scorer (Pruner's draft-then-verify explorer)."""
+
+    def __init__(self, cfg: Optional[CostModelConfig] = None,
+                 width: int = 256, depth: int = 3):
+        super().__init__(cfg)
+        self.width = width
+        self.depth = depth
+
+    @property
+    def hidden_dim(self) -> int:
+        return self.width
+
+    def init(self, rng: jax.Array) -> PyTree:
+        params = {}
+        rng, k = jax.random.split(rng)
+        params["w_in"] = jax.random.normal(
+            k, (self.cfg.feature_dim, self.width)) / np.sqrt(self.cfg.feature_dim)
+        params["b_in"] = jnp.zeros((self.width,))
+        for i in range(self.depth):
+            rng, k = jax.random.split(rng)
+            params[f"w{i}"] = jax.random.normal(
+                k, (self.width, self.width)) / np.sqrt(self.width)
+            params[f"b{i}"] = jnp.zeros((self.width,))
+        rng, k = jax.random.split(rng)
+        params["w_out"] = jax.random.normal(
+            k, (self.width, 1)) / np.sqrt(self.width)
+        params["b_out"] = jnp.zeros((1,))
+        return params
+
+    def forward(self, params, x, return_hidden: bool = False):
+        # depth is recovered from the params so `forward` stays pure
+        blocks = len([k for k in params
+                      if k.startswith("w") and k not in ("w_in", "w_out")])
+        h = x @ params["w_in"] + params["b_in"]
+        for i in range(blocks):
+            h = h + jax.nn.relu(h @ params[f"w{i}"] + params[f"b{i}"])
+        score = (h @ params["w_out"] + params["b_out"])[..., 0]
+        if return_hidden:
+            return score, h
+        return score

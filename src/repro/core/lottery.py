@@ -29,11 +29,21 @@ def xi_scores(params: PyTree, grads: PyTree) -> PyTree:
 
 
 def normalize_scores(scores: PyTree) -> PyTree:
-    """Normalize xi to [0, 1] across the whole model (for the theta mode)."""
+    """Normalize xi to [0, 1] across the whole model (for the theta mode).
+
+    Degenerate case: when every xi is equal (e.g. a zero gradient step makes
+    all |w * grad_w| identical), (s - lo) / rng would map everything to 0 and
+    the theta mask would collapse to all-variant — decaying the whole model
+    toward zero with no transferable parameters left. There is no ranking
+    signal to threshold, so treat every parameter as transferable instead
+    (all-ones normalized scores => all-ones mask for any theta < 1)."""
     flat = jnp.concatenate([s.reshape(-1) for s in jax.tree.leaves(scores)])
     lo, hi = flat.min(), flat.max()
     rng = jnp.maximum(hi - lo, 1e-30)
-    return jax.tree.map(lambda s: (s - lo) / rng, scores)
+    degenerate = (hi - lo) <= 0.0  # traced-safe: resolved via jnp.where
+    return jax.tree.map(
+        lambda s: jnp.where(degenerate, jnp.ones_like(s), (s - lo) / rng),
+        scores)
 
 
 def mask_by_threshold(scores: PyTree, theta: float) -> PyTree:

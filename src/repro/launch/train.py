@@ -30,17 +30,19 @@ def maybe_autotune(device: str, cfg):
     from repro.autotune.registry import Registry
     from repro.autotune.tasks import arch_tasks
     from repro.autotune.tuner import tune
-    from repro.core.cost_model import init_mlp_params, train_cost_model
+    from repro.core.cost_model import resolve_cost_model
 
     print(f"[autotune] Moses adaptation {MOSES_CFG.source_device} -> {device}")
     pool = training_task_pool(include_archs=False)
     src = generate_records(pool, MOSES_CFG.source_device,
                            programs_per_task=24, seed=0)
-    params = init_mlp_params(MOSES_CFG.cost_model, jax.random.PRNGKey(0))
-    params, _ = train_cost_model(params, src, MOSES_CFG.cost_model, epochs=10)
+    model = resolve_cost_model("mlp", MOSES_CFG.cost_model)
+    params = model.init(jax.random.PRNGKey(0))
+    params, _ = model.train(params, src, epochs=10)
     tasks = arch_tasks(cfg)
     result = tune(tasks, device, "moses", MOSES_CFG, trials_per_task=48,
-                  pretrained_params=params, source_pool=src)
+                  pretrained_params=params, source_pool=src,
+                  cost_model=model)
     reg = Registry()
     reg.ingest(result)
     reg.save()

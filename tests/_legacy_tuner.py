@@ -1,71 +1,39 @@
-"""The auto-tuning loop (paper Fig. 2 pipeline + §3.6).
+"""Frozen copy of the PRE-REFACTOR `tune()` (PR 1 state, git 74fb702),
+kept verbatim as the reference implementation for the string-strategy parity
+test: the registry-resolved Strategy/CostModel path must produce bit-identical
+`TuneResult`s to this if/elif ladder on a fixed seed. Only the module
+docstring and the result-class imports differ from the historical file (the
+dataclasses are shared with the live tuner so results compare directly).
 
-The loop is fixed; the policies around it are plugins:
-
-  * adaptation scheme — a `Strategy` (autotune/strategies.py), resolved from
-    a registered name or passed as an instance. The five paper strategies
-    (paper §4.4: raw, ansor-random, tenset-pretrain, tenset-finetune, moses)
-    ship registered; new schemes are one `@register_strategy` class.
-  * scoring model — a `CostModel` (core/cost_model.py), resolved the same
-    way ("mlp" is the paper default; "residual-mlp" ships as a second
-    family). Strategies only ever see the interface.
-
-Search-time accounting mirrors the paper: on-device measurement dominates, so
-search_time = sum(measurement_seconds) + small per-round model-update cost.
-The AC module (moses only) truncates the measurement phase when the cost
-model's CV stabilizes.
-
-Hot path (see docs/architecture.md): each task owns a FeatureCache (every
-distinct config featurized once) and a RecordsBuilder (records appended
-incrementally, labels re-normalized per snapshot); all scoring goes through
-`CostModel.batched_predict`, whose bucket padding keeps every call on one
-compiled forward. Use `autotune.session.TuneSession` to run several (device,
-strategy) jobs over shared pretrained params.
+Not part of the library — test support only.
 """
+
 from __future__ import annotations
 
+import copy
 import dataclasses
-from typing import List, Optional, Sequence, Tuple, Union
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import numpy as np
 
 from repro.autotune import devices as dev_mod
 from repro.autotune.evolution import evolutionary_search
-from repro.autotune.space import ProgramConfig, Workload, default_config
-from repro.autotune.strategies import (STRATEGIES, Strategy, StrategyContext,
-                                       resolve_strategy, strategy_name)
+from repro.autotune.space import (ProgramConfig, Workload, default_config,
+                                  random_config)
 from repro.configs.moses import MosesConfig
-from repro.core.cost_model import (CostModel, Records, RecordsBuilder,
-                                   resolve_cost_model)
+from repro.core.ac import ACState, AdaptiveController
+from repro.core.adaptation import MosesAdapter
+from repro.core.cost_model import (Records, RecordsBuilder, batched_predict,
+                                   init_mlp_params, train_cost_model)
 from repro.core.features import FeatureCache
 
-
-@dataclasses.dataclass
-class TaskResult:
-    workload: Workload
-    best_config: ProgramConfig
-    best_throughput: float          # GFLOP/s (noiseless eval)
-    best_latency: float             # seconds per call (noiseless)
-    measurements: int
-    search_seconds: float
-    trajectory: List[float]         # best-so-far throughput per measurement
+STRATEGIES = ("raw", "ansor-random", "tenset-pretrain", "tenset-finetune",
+              "moses")
 
 
-@dataclasses.dataclass
-class TuneResult:
-    strategy: str
-    device: str
-    tasks: List[TaskResult]
-    total_search_seconds: float
-
-    @property
-    def model_latency(self) -> float:
-        """End-to-end latency: sum over subgraphs of best latency x count."""
-        return sum(t.best_latency * t.workload.count for t in self.tasks)
-
-    @property
-    def total_measurements(self) -> int:
-        return sum(t.measurements for t in self.tasks)
+from repro.autotune.tuner import TaskResult, TuneResult  # noqa: E402
 
 
 def _noiseless_latency(wl: Workload, cfg: ProgramConfig, device: str) -> float:
@@ -73,10 +41,10 @@ def _noiseless_latency(wl: Workload, cfg: ProgramConfig, device: str) -> float:
                                   noisy=False)
 
 
-def tune(
+def legacy_tune(
     tasks: Sequence[Workload],
     device: str,
-    strategy: Union[str, Strategy],
+    strategy: str,
     moses_cfg: MosesConfig,
     trials_per_task: int = 200,
     pretrained_params=None,
@@ -85,21 +53,29 @@ def tune(
     ratio_override: Optional[float] = None,
     model_update_cost: float = 2.0,
     cross_task: bool = False,
-    cost_model: Union[str, CostModel, None] = None,
 ) -> TuneResult:
-    """Tune `tasks` on `device` under an adaptation `strategy`.
-
-    `strategy` and `cost_model` accept registered names (back-compat: the
-    five paper strategies and "mlp" resolve exactly as the old string API
-    did) or instances for anything custom.
-    """
-    strat = resolve_strategy(strategy)
-    cm = resolve_cost_model(cost_model, moses_cfg.cost_model)
-    strat.prepare(StrategyContext(
-        cfg=moses_cfg, cost_model=cm, device=device, seed=seed,
-        pretrained_params=pretrained_params, source_pool=source_pool,
-        ratio_override=ratio_override, model_update_cost=model_update_cost))
+    assert strategy in STRATEGIES, strategy
     rng = np.random.RandomState(seed)
+    cm_cfg = moses_cfg.cost_model
+
+    # --- cost model initialization per strategy
+    params = None
+    adapter = None
+    if strategy == "ansor-random":
+        params = init_mlp_params(cm_cfg, jax.random.PRNGKey(seed))
+    elif strategy in ("tenset-pretrain", "tenset-finetune"):
+        assert pretrained_params is not None
+        params = copy.deepcopy(pretrained_params)
+    elif strategy == "moses":
+        assert pretrained_params is not None
+        adapter = MosesAdapter(cfg=moses_cfg,
+                               params=copy.deepcopy(pretrained_params),
+                               source_pool=source_pool,
+                               ratio_override=ratio_override)
+        params = adapter.params
+
+    ac = AdaptiveController(moses_cfg.ac_train_ratio, moses_cfg.ac_num_batches,
+                            moses_cfg.ac_cv_threshold)
 
     task_results: List[TaskResult] = []
     total_search = 0.0
@@ -108,14 +84,6 @@ def tune(
     archive: List = []
 
     for gid, wl in enumerate(tasks):
-        if not strat.uses_model:
-            cfg = default_config(wl)
-            lat = _noiseless_latency(wl, cfg, device)
-            task_results.append(TaskResult(wl, cfg, wl.flops / lat / 1e9, lat,
-                                           0, 0.0, []))
-            continue
-
-        strat.begin_task(wl)
         seen: set = set()
         measured: List[Tuple[ProgramConfig, float]] = []
         traj: List[float] = []
@@ -126,12 +94,27 @@ def tune(
         cache = FeatureCache()
         builder = RecordsBuilder()
 
-        def score_fn(feats: np.ndarray) -> np.ndarray:
-            if strat.params is None:
-                return rng.rand(len(feats))
-            return cm.batched_predict(strat.params, feats)
+        if strategy == "raw":
+            cfg = default_config(wl)
+            lat = _noiseless_latency(wl, cfg, device)
+            task_results.append(TaskResult(wl, cfg, wl.flops / lat / 1e9, lat,
+                                           0, 0.0, []))
+            continue
 
-        batch_sizes, n_pred = strat.plan(trials_per_task)
+        def score_fn(feats: np.ndarray) -> np.ndarray:
+            if params is None:
+                return rng.rand(len(feats))
+            return batched_predict(params, feats)
+
+        # measurement plan
+        if strategy == "moses":
+            batch_sizes, n_pred = ac.plan(trials_per_task)
+            ac_state = ACState()
+        else:
+            per_round = moses_cfg.top_k_measure
+            n_meas = trials_per_task
+            batch_sizes = [per_round] * max(1, n_meas // per_round)
+            n_pred = 0
 
         warm_seeds: List[ProgramConfig] = []
         if cross_task and archive:
@@ -169,28 +152,38 @@ def tune(
             search_s += sum(dev_mod.measurement_seconds(wl, c, device)
                             for c in cands)
 
-            # strategy hook: online model update on the incremental record
-            # set (features were extracted once at measurement time; only
-            # labels re-normalize) — each strategy snapshots only if it
-            # trains, and reports its model-update cost + AC termination
-            upd = strat.on_round(builder, feats, bi)
-            search_s += upd.cost_seconds
-            if upd.terminate:
-                # early-terminate hardware measurement; remaining trials
-                # are pure cost-model predictions (paper §3.5)
-                n_pred += sum(batch_sizes[bi + 1:])
-                break
+            # online model update on the incremental record set (features were
+            # extracted once at measurement time; only labels re-normalize);
+            # snapshot only for strategies that train on it
+            if strategy in ("ansor-random", "tenset-finetune"):
+                params, _ = train_cost_model(params, builder.snapshot(),
+                                             cm_cfg,
+                                             epochs=moses_cfg.online_epochs,
+                                             seed=seed + bi, pad=True)
+                search_s += model_update_cost
+            elif strategy == "moses":
+                adapter.adapt(builder.snapshot(),
+                              epochs=moses_cfg.online_epochs)
+                params = adapter.params
+                search_s += model_update_cost
+                preds = batched_predict(params, feats)
+                ac_state = ac.update(ac_state, preds)
+                if ac_state.terminated:
+                    # early-terminate hardware measurement; remaining trials
+                    # are pure cost-model predictions (paper §3.5)
+                    n_pred += sum(batch_sizes[bi + 1:])
+                    break
+            # tenset-pretrain never updates
 
         # prediction-only trials: explore with the (adapted) cost model and
         # accept its argmax WITHOUT measuring (zero hardware cost)
-        if n_pred > 0 and strat.params is not None:
+        if n_pred > 0 and params is not None:
             cands = evolutionary_search(
                 wl, score_fn, rng, population=moses_cfg.population_size,
                 rounds=moses_cfg.evolution_rounds, top_k=n_pred, seen=seen,
                 feature_cache=cache)
             cands = cands or [default_config(wl)]
-            scores = cm.batched_predict(strat.params,
-                                        cache.features_batch(wl, cands))
+            scores = batched_predict(params, cache.features_batch(wl, cands))
             top = cands[int(np.argmax(scores))]
             # top-1 predicted config gets one confirmation measurement
             thr = dev_mod.measure(wl, top, device, trial=97)
@@ -210,5 +203,4 @@ def tune(
             top4 = [c for c, _ in sorted(measured, key=lambda t: -t[1])[:4]]
             archive.append((workload_descriptor(wl), top4))
 
-    return TuneResult(strategy_name(strat), device, task_results,
-                      total_search)
+    return TuneResult(strategy, device, task_results, total_search)

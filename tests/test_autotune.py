@@ -190,6 +190,59 @@ class TestTasks:
                 assert "scan" in kinds
 
 
+class TestRegistryRoundTrip:
+    """Tuned-config Registry persistence invariants: ingest -> save -> load
+    preserves winners, and collisions keep the better config regardless of
+    ingest order."""
+
+    def _result(self, wl, device, knobs, throughput):
+        from repro.autotune.space import ProgramConfig
+        from repro.autotune.tuner import TaskResult, TuneResult
+        cfg = ProgramConfig(tuple(sorted(knobs.items())))
+        task = TaskResult(wl, cfg, throughput, 1.0 / max(throughput, 1e-9),
+                          1, 0.0, [throughput])
+        return TuneResult("moses", device, [task], 0.0)
+
+    def test_ingest_save_load_preserves_winners(self, tmp_path):
+        from repro.autotune.registry import Registry
+        wl_a = Workload("matmul", (128, 128, 128), name="a")
+        wl_b = Workload("matmul", (256, 128, 128), name="b")
+        knobs_a = {"block_m": 128, "block_n": 128, "block_k": 128,
+                   "k_inner": 0, "unroll": 1, "out_bf16": 0}
+        knobs_b = dict(knobs_a, block_m=64)
+        path = str(tmp_path / "tuned.json")
+        reg = Registry(path=path)
+        reg.ingest(self._result(wl_a, "tpu_v5e", knobs_a, 100.0))
+        reg.ingest(self._result(wl_b, "tpu_v5e", knobs_b, 50.0))
+        reg.ingest(self._result(wl_a, "tpu_edge", knobs_b, 10.0))
+        reg.save()
+        loaded = Registry(path=path)
+        assert loaded.get("tpu_v5e", wl_a).as_dict() == knobs_a
+        assert loaded.get("tpu_v5e", wl_b).as_dict() == knobs_b
+        assert loaded.get("tpu_edge", wl_a).as_dict() == knobs_b
+        # unknown workloads fall back to the vendor default
+        wl_new = Workload("matmul", (512, 512, 512), name="new")
+        assert loaded.get("tpu_v5e", wl_new).knobs == \
+            default_config(wl_new).knobs
+
+    @pytest.mark.parametrize("better_first", [True, False])
+    def test_collision_keeps_better_either_order(self, tmp_path,
+                                                 better_first):
+        from repro.autotune.registry import Registry
+        wl = Workload("matmul", (128, 128, 128), name="a")
+        worse = {"block_m": 64, "block_n": 128, "block_k": 128,
+                 "k_inner": 0, "unroll": 1, "out_bf16": 0}
+        better = dict(worse, block_m=128)
+        results = [self._result(wl, "tpu_v5e", better, 200.0),
+                   self._result(wl, "tpu_v5e", worse, 100.0)]
+        if not better_first:
+            results.reverse()
+        reg = Registry(path=str(tmp_path / "tuned.json"))
+        reg.ingest_many(results, save=True)
+        loaded = Registry(path=str(tmp_path / "tuned.json"))
+        assert loaded.get("tpu_v5e", wl).as_dict() == better
+
+
 class TestCrossTaskTransfer:
     """Beyond-paper extension (paper §5 future work): cross-subgraph
     warm-starting via the cross_task archive."""

@@ -47,6 +47,36 @@ class TestLottery:
         n = sum(x.size for x in jax.tree.leaves(p))
         assert abs(frac - ratio) <= 1.5 / n + 0.03
 
+    def test_degenerate_equal_scores_mask_all_transferable(self):
+        """Regression: when every xi is equal there is no ranking signal —
+        normalization used to map all scores to 0, collapsing theta-mode
+        masks to all-variant (the whole model decays toward zero). The guard
+        must treat every parameter as transferable instead."""
+        scores = {"w0": jnp.full((4, 3), 0.7), "b0": jnp.full((3,), 0.7)}
+        norm = lottery.normalize_scores(scores)
+        for leaf in jax.tree.leaves(norm):
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.ones_like(np.asarray(leaf)))
+        mask = lottery.mask_by_threshold(scores, theta=0.5)
+        assert lottery.mask_fraction(mask) == 1.0
+        # all-zero scores (e.g. a zero gradient step) hit the same guard
+        zero = {"w0": jnp.zeros((4, 3))}
+        m0 = lottery.mask_by_threshold(zero, theta=0.5)
+        assert lottery.mask_fraction(m0) == 1.0
+        # under jit too: the guard is a traced jnp.where, not a python branch
+        m_jit = jax.jit(lambda s: lottery.mask_by_threshold(s, 0.5))(scores)
+        assert lottery.mask_fraction(m_jit) == 1.0
+
+    def test_normalization_unchanged_when_scores_differ(self):
+        """The degenerate guard must not perturb the normal path."""
+        p = _toy_params()
+        g = _toy_grads(p)
+        scores = lottery.xi_scores(p, g)
+        norm = lottery.normalize_scores(scores)
+        flat = np.concatenate([np.asarray(s).ravel()
+                               for s in jax.tree.leaves(norm)])
+        assert flat.min() == 0.0 and flat.max() == 1.0
+
     def test_threshold_mask_monotone(self):
         p = _toy_params()
         g = _toy_grads(p)
