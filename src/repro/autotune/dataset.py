@@ -51,7 +51,11 @@ def training_task_pool(seed: int = 0, include_archs: bool = True
 
 def generate_records(tasks: Sequence[Workload], device: str,
                      programs_per_task: int = 64, seed: int = 0,
-                     noisy: bool = True) -> Records:
+                     noisy: bool = True, store=None) -> Records:
+    """Sample + measure a record pool on `device`. With `store` set (a
+    duck-typed `repro.hub.store.RecordStore`), every measurement is also
+    appended to the persistent cross-device corpus instead of being thrown
+    away with the run (caller flushes)."""
     rng = np.random.RandomState(seed)
     feats, raw, gids = [], [], []
     for gid, wl in enumerate(tasks):
@@ -61,9 +65,12 @@ def generate_records(tasks: Sequence[Workload], device: str,
             if cfg.knobs in seen:
                 continue
             seen.add(cfg.knobs)
+            thr = measure(wl, cfg, device, trial=0, noisy=noisy)
             feats.append(extract_features(wl, cfg))
-            raw.append(measure(wl, cfg, device, trial=0, noisy=noisy))
+            raw.append(thr)
             gids.append(gid)
+            if store is not None:
+                store.put(device, wl, cfg, thr)
     x = np.stack(feats)
     raw = np.asarray(raw, np.float32)
     g = np.asarray(gids, np.int32)

@@ -16,7 +16,10 @@ the paper's Eq. 3 assumes:
 
 Device roles (paper mapping): tpu_v5p = K80 (source, big dataset);
 tpu_v5e = RTX 2060 (same-class target); tpu_edge = Jetson TX2 (embedded-class
-target, very different response surface).
+target, very different response surface). Beyond the paper, the zoo carries
+extra parts (tpu_v5e_pro near-clone, bandwidth-starved tpu_lite, embedded
+tpu_edge2) so the transfer hub's fingerprint-based source selection
+(src/repro/hub/) has a meaningful neighborhood structure to discover.
 """
 from __future__ import annotations
 
@@ -85,6 +88,37 @@ DEVICES: Dict[str, DeviceModel] = {
                             sweet_block=64, block_sigma=1.1, prefer_k_inner=0,
                             k_inner_penalty=1.5, f32_out_penalty=1.35,
                             sweet_chunk=32),
+    # --- transfer-hub zoo extensions: devices whose fingerprints make
+    # nearest-source selection non-trivial (hub/fingerprint.py) -------------
+    # speed-binned near-clone of tpu_v5e: ~8% faster clocks/bandwidth but
+    # the SAME response surface (sweet spots, alignment, penalties). The
+    # fingerprint is scale-free, so this must rank as tpu_v5e's nearest
+    # neighbor — the case where warm-starting is essentially free.
+    "tpu_v5e_pro": DeviceModel("tpu_v5e_pro", 213e12, 885e9, 16 * 2**20, 128,
+                               6e-6, 2.0e-7, 256, 2.0, 0.55, 2, 0.04, 97,
+                               sweet_block=256, block_sigma=2.0,
+                               prefer_k_inner=1, k_inner_penalty=1.2,
+                               f32_out_penalty=1.05, sweet_chunk=256),
+    # bandwidth-starved inference part: a respectable MXU behind an anemic
+    # memory system (LPDDR-class bandwidth, small VMEM, harsh burst floor).
+    # Almost every workload is memory-bound, so its response surface sits
+    # between the edge chips and the datacenter parts — small k blocks,
+    # bf16 stores, no in-VMEM accumulation win here.
+    "tpu_lite": DeviceModel("tpu_lite", 45e12, 102e9, 4 * 2**20, 128,
+                            20e-6, 5e-7, 512, 3.0, 0.7, 2, 0.05, 113,
+                            sweet_block=128, block_sigma=1.5,
+                            prefer_k_inner=0, k_inner_penalty=1.35,
+                            f32_out_penalty=1.25, sweet_chunk=64),
+    # second-generation embedded chip: same qualitative regime as tpu_edge
+    # (tiny VMEM, huge launch overheads, small-tile optima) with modestly
+    # better alignment handling — tpu_edge's natural nearest neighbor, and
+    # the canary that embedded targets select embedded sources rather than
+    # the big forgiving datacenter corpus.
+    "tpu_edge2": DeviceModel("tpu_edge2", 13e12, 102e9, 2 * 2**20, 64,
+                             45e-6, 7e-7, 128, 3.8, 0.85, 1, 0.055, 127,
+                             sweet_block=64, block_sigma=1.2,
+                             prefer_k_inner=0, k_inner_penalty=1.45,
+                             f32_out_penalty=1.3, sweet_chunk=32),
 }
 
 
@@ -213,5 +247,6 @@ def measurement_seconds(wl: Workload, cfg: ProgramConfig, device: str,
     search-time accounting: compile + transfer + n_repeats executions)."""
     dev = DEVICES[device]
     t = execution_time(wl, cfg, dev, noisy=False)
-    compile_and_xfer = 0.3 if device != "tpu_edge" else 1.2  # embedded is slow
+    # embedded parts pay a much larger compile + transfer toll per trial
+    compile_and_xfer = 1.2 if device in ("tpu_edge", "tpu_edge2") else 0.3
     return compile_and_xfer + n_repeats * t

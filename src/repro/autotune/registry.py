@@ -39,14 +39,25 @@ class Registry:
         with _LOCK:
             self._put_unlocked(device, wl, cfg, throughput)
 
+    def lookup(self, device: str, wl: Workload) -> Optional[dict]:
+        """The raw registry entry for (device, workload), or None on a miss
+        (unlike `get`, which silently falls back to the vendor default —
+        servers like the TuningHub need to distinguish the two)."""
+        with _LOCK:
+            entry = self._data.get(device, {}).get(wl.key())
+            return dict(entry) if entry is not None else None
+
     def get(self, device: str, wl: Workload) -> ProgramConfig:
-        entry = self._data.get(device, {}).get(wl.key())
+        entry = self.lookup(device, wl)
         if entry is None:
             return default_config(wl)
         return ProgramConfig(tuple(sorted(
             (k, int(v)) for k, v in entry["knobs"].items())))
 
     def save(self):
+        """Atomic persist: serialize to a temp file, then `os.replace` — a
+        writer crashing mid-save can never truncate or corrupt an existing
+        registry file (regression-tested in test_hub.py)."""
         with _LOCK:
             os.makedirs(os.path.dirname(os.path.abspath(self.path)),
                         exist_ok=True)

@@ -59,6 +59,10 @@ class TuneSession:
         job.
       registry: when set, every finished job's best configs are ingested
         (call `registry.save()` yourself when you want them persisted).
+      store: when set, every measurement each job makes is appended to this
+        record store (duck-typed `repro.hub.store.RecordStore`: put_result +
+        flush) — the hub's persistent cross-device corpus. Call
+        `store.flush()` to persist (the TuningHub service does both).
       cost_model: scoring-model family shared by every job — a registered
         name ("mlp", "residual-mlp", ...) or a `CostModel` instance; None is
         the paper default MLP. Per-job overrides go through
@@ -83,6 +87,7 @@ class TuneSession:
     seed: int = 0
     trials_per_task: Optional[int] = None
     registry: Optional[Registry] = None
+    store: Optional[Any] = None  # duck-typed hub RecordStore (no dep cycle)
     isolate_rng: bool = True
     cost_model: Union[str, CostModel, None] = None
     results: List[TuneResult] = dataclasses.field(default_factory=list)
@@ -136,6 +141,8 @@ class TuneSession:
         self.results.append(result)
         if self.registry is not None:
             self.registry.ingest(result)
+        if self.store is not None:
+            self.store.put_result(result)
         return result
 
     def run_matrix(self, task_sets: Dict[str, Sequence[Workload]],

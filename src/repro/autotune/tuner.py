@@ -49,6 +49,11 @@ class TaskResult:
     measurements: int
     search_seconds: float
     trajectory: List[float]         # best-so-far throughput per measurement
+    # every (config, measured throughput, trial index) triple, in
+    # measurement order — what the transfer hub's record store persists
+    # (trial matters: the simulator's noise redraws per trial, so the store
+    # dedups on (task, config, trial)). None for legacy callers.
+    measured: Optional[List[Tuple[ProgramConfig, float, int]]] = None
 
 
 @dataclasses.dataclass
@@ -112,12 +117,13 @@ def tune(
             cfg = default_config(wl)
             lat = _noiseless_latency(wl, cfg, device)
             task_results.append(TaskResult(wl, cfg, wl.flops / lat / 1e9, lat,
-                                           0, 0.0, []))
+                                           0, 0.0, [], measured=[]))
             continue
 
         strat.begin_task(wl)
         seen: set = set()
         measured: List[Tuple[ProgramConfig, float]] = []
+        recorded: List[Tuple[ProgramConfig, float, int]] = []  # + trial idx
         traj: List[float] = []
         best_thr = float("-inf")    # running best-so-far for the trajectory
         search_s = 0.0
@@ -163,6 +169,7 @@ def tune(
                             for c in cands], np.float32)
             for c, t, f in zip(cands, thr, feats):
                 measured.append((c, float(t)))
+                recorded.append((c, float(t), bi))
                 builder.append(f, float(t))
                 best_thr = max(best_thr, float(t))
                 traj.append(best_thr)
@@ -195,6 +202,7 @@ def tune(
             # top-1 predicted config gets one confirmation measurement
             thr = dev_mod.measure(wl, top, device, trial=97)
             measured.append((top, float(thr)))
+            recorded.append((top, float(thr), 97))
             best_thr = max(best_thr, float(thr))
             traj.append(best_thr)
             search_s += dev_mod.measurement_seconds(wl, top, device)
@@ -203,7 +211,7 @@ def tune(
         lat = _noiseless_latency(wl, best_cfg, device)
         task_results.append(TaskResult(
             wl, best_cfg, wl.flops / lat / 1e9, lat,
-            len(measured), search_s, traj))
+            len(measured), search_s, traj, measured=recorded))
         total_search += search_s
         if cross_task:
             from repro.autotune.space import workload_descriptor

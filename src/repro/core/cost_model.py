@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import json
 from functools import partial
 from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
@@ -388,6 +389,38 @@ def resolve_cost_model(spec=None, cfg: Optional[CostModelConfig] = None
     return COST_MODELS[spec](cfg if cfg is not None else CostModelConfig())
 
 
+# Reserved .npz key under which `save_params` embeds a JSON metadata blob
+# (model family name, schema hints for the transfer hub's param store).
+PARAMS_META_KEY = "__meta__"
+
+
+def save_params(path: str, params: PyTree,
+                meta: Optional[Dict[str, Any]] = None) -> None:
+    """Persist a flat-dict param pytree as .npz, with optional JSON metadata
+    embedded under `PARAMS_META_KEY` (the hub stores the model family there
+    so a loader can refuse params built for a different architecture)."""
+    arrs = {k: np.asarray(v) for k, v in params.items()}
+    if meta is not None:
+        arrs[PARAMS_META_KEY] = np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), np.uint8).copy()
+    np.savez(path, **arrs)
+
+
+def load_params(path: str) -> Tuple[PyTree, Dict[str, Any]]:
+    """Inverse of `save_params`: returns (params, meta). Files written
+    without metadata (including pre-hub `CostModel.save` output) load with
+    an empty meta dict."""
+    meta: Dict[str, Any] = {}
+    with np.load(path) as z:
+        params = {}
+        for k in z.files:
+            if k == PARAMS_META_KEY:
+                meta = json.loads(bytes(z[k].tolist()).decode())
+            else:
+                params[k] = jnp.asarray(z[k])
+    return params, meta
+
+
 class CostModel(abc.ABC):
     """The swappable scoring-model policy around the fixed search loop.
 
@@ -467,13 +500,19 @@ class CostModel(abc.ABC):
         """Deep copy, so strategies never mutate shared pretrained params."""
         return jax.tree.map(lambda a: jnp.array(a), params)
 
-    def save(self, params: PyTree, path: str) -> None:
-        """Persist a flat-dict param pytree as .npz."""
-        np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+    def save(self, params: PyTree, path: str,
+             meta: Optional[Dict[str, Any]] = None) -> None:
+        """Persist a flat-dict param pytree as .npz, tagged with the model
+        family name (+ any extra `meta`) so hub loaders can check it."""
+        save_params(path, params, meta={"model": self.name, **(meta or {})})
 
     def load(self, path: str) -> PyTree:
-        with np.load(path) as z:
-            return {k: jnp.asarray(z[k]) for k in z.files}
+        params, meta = load_params(path)
+        if meta.get("model") not in (None, self.name):
+            raise ValueError(
+                f"{path} holds params for model family {meta['model']!r}, "
+                f"not {self.name!r}")
+        return params
 
 
 @register_cost_model("mlp")

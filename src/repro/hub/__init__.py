@@ -1,0 +1,31 @@
+"""Transfer Hub: the persistent cross-device experience layer.
+
+Sits between the simulator/dataset layer and the tuning stack:
+
+  store.py        append-only on-disk record store (JSONL shards keyed by
+                  device/task; schema-versioned, deduplicated, atomic writes)
+  fingerprint.py  micro-probe suite -> normalized device fingerprint vector
+                  + similarity metric
+  transfer.py     source-selection policy: rank known devices by fingerprint
+                  similarity, assemble a mixed weighted source pool +
+                  pretrained cost-model params for an unseen target
+  service.py      TuningHub facade: get_config(device, workload) serves from
+                  the tuned-config Registry on hit and schedules batched
+                  TuneSession jobs on miss (in-flight dedup, writeback of
+                  winners and of every new measurement into the store)
+"""
+from repro.hub.fingerprint import (PROBE_VERSION, device_fingerprint,
+                                   fingerprint_similarity, probe_suite,
+                                   rank_by_similarity)
+from repro.hub.service import HubResponse, HubStats, TuningHub
+from repro.hub.store import (SCHEMA_VERSION, RecordStore, StoreSchemaError,
+                             workload_from_record)
+from repro.hub.transfer import SourceSelection, bootstrap_store, select_sources
+
+__all__ = [
+    "SCHEMA_VERSION", "RecordStore", "StoreSchemaError",
+    "workload_from_record", "PROBE_VERSION", "probe_suite",
+    "device_fingerprint", "fingerprint_similarity", "rank_by_similarity",
+    "SourceSelection", "select_sources", "bootstrap_store",
+    "TuningHub", "HubResponse", "HubStats",
+]

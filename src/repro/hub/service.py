@@ -1,0 +1,239 @@
+"""TuningHub: tune-on-miss serving of best configs per (device, workload).
+
+The query layer the ROADMAP's "serve heavy traffic" direction needs: callers
+ask `get_config(device, workload)` and the hub answers from the tuned-config
+`Registry` when it can (a hit costs a dict lookup, zero measurements). On a
+miss the workload is queued; `flush()` runs ONE batched `TuneSession` job per
+device over everything pending for it, warm-started through
+`transfer.select_sources` (fingerprint -> nearest known sources -> mixed
+pool + pretrained params). Winners go to the registry, every new measurement
+goes back into the record store, and the target's fingerprint + freshly
+adapted params are persisted — so the *next* unseen device has one more
+neighbor to learn from.
+
+In-flight dedup: a (device, task) that is already pending or being tuned is
+never queued twice; concurrent `get_config` calls for it block on the
+serving lock and return the registry hit once the first job lands.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+import jax
+
+from repro.autotune.registry import Registry
+from repro.autotune.session import TuneSession
+from repro.autotune.space import ProgramConfig, Workload
+from repro.autotune.strategies import Strategy, resolve_strategy
+from repro.configs.moses import DEFAULT as DEFAULT_CFG
+from repro.configs.moses import MosesConfig
+from repro.core.cost_model import resolve_cost_model
+from repro.hub.fingerprint import device_fingerprint
+from repro.hub.store import RecordStore
+from repro.hub.transfer import SourceSelection, select_sources
+
+
+@dataclasses.dataclass
+class HubStats:
+    hits: int = 0
+    misses: int = 0
+    jobs: int = 0            # batched TuneSession jobs run
+    dedup_skips: int = 0     # requests already pending/in-flight
+    measurements: int = 0    # total new on-device measurements
+
+
+@dataclasses.dataclass
+class HubResponse:
+    """What a `get_config` query returns."""
+    device: str
+    workload: Workload
+    config: ProgramConfig
+    cache_hit: bool
+    throughput_gflops: Optional[float]       # registry's recorded winner
+    new_measurements: int                    # 0 on a hit
+    sources: List[Tuple[str, float]]         # (source device, weight); [] hit
+
+
+class TuningHub:
+    """Facade over store + fingerprint + transfer + session + registry.
+
+    Layout under `root`: the record store at `<root>/store`, the served
+    registry at `<root>/tuned_configs.json` (override via `registry=` to
+    serve into an existing registry, e.g. the kernels' default one).
+    """
+
+    def __init__(self, root: str,
+                 moses_cfg: MosesConfig = DEFAULT_CFG,
+                 registry: Optional[Registry] = None,
+                 store: Optional[RecordStore] = None,
+                 strategy: Union[str, Strategy] = "moses",
+                 cost_model: str = "mlp",
+                 trials_per_task: Optional[int] = None,
+                 top_k_sources: int = 2,
+                 pretrain_epochs: int = 6,
+                 seed: int = 0):
+        self.root = root
+        self.moses_cfg = moses_cfg
+        self.store = store if store is not None else RecordStore(
+            os.path.join(root, "store"))
+        self.registry = registry if registry is not None else Registry(
+            path=os.path.join(root, "tuned_configs.json"))
+        self.strategy = strategy
+        self.cost_model_name = cost_model
+        self.trials_per_task = trials_per_task
+        self.top_k_sources = top_k_sources
+        self.pretrain_epochs = pretrain_epochs
+        self.seed = seed
+        self.stats = HubStats()
+        self._lock = threading.RLock()          # hub state (queues, stats)
+        self._dev_locks: Dict[str, threading.Lock] = {}  # one job per device
+        self._pending: Dict[str, Dict[str, Workload]] = {}
+        self._inflight: Set[Tuple[str, str]] = set()
+        self._selections: Dict[str, SourceSelection] = {}
+
+    # --- queueing ---------------------------------------------------------
+    def request(self, device: str, wl: Workload) -> bool:
+        """Queue (device, workload) for the next `flush()` unless it is
+        already served, pending, or in flight. Returns True iff queued."""
+        with self._lock:
+            if self.registry.lookup(device, wl) is not None:
+                return False
+            key = wl.key()
+            if (key in self._pending.get(device, {})
+                    or (device, key) in self._inflight):
+                self.stats.dedup_skips += 1
+                return False
+            self._pending.setdefault(device, {})[key] = wl
+            return True
+
+    def pending(self, device: Optional[str] = None) -> int:
+        with self._lock:
+            if device is not None:
+                return len(self._pending.get(device, {}))
+            return sum(len(v) for v in self._pending.values())
+
+    # --- serving ----------------------------------------------------------
+    def get_config(self, device: str, wl: Workload,
+                   flush: bool = True) -> HubResponse:
+        """Serve the best known config for (device, workload).
+
+        Registry hit: answered immediately, zero measurements. Miss: the
+        workload is queued and (with `flush=True`, the default) tuned now in
+        one batched job together with everything else pending for the
+        device; `flush=False` just queues (prefetch) and serves the vendor
+        default until a later flush lands."""
+        with self._lock:
+            entry = self.registry.lookup(device, wl)
+            if entry is not None:
+                self.stats.hits += 1
+                return HubResponse(device, wl, self.registry.get(device, wl),
+                                   True, entry.get("throughput_gflops"),
+                                   0, [])
+            self.stats.misses += 1
+            self.request(device, wl)
+            if not flush:
+                return HubResponse(device, wl, self.registry.get(device, wl),
+                                   False, None, 0, [])
+        # tune outside the hub lock: hits for other (device, workload)s keep
+        # being served while this job runs. If another thread is already
+        # tuning this key (it was in flight above), flush() blocks on the
+        # device job lock and the re-lookup below serves that job's winner
+        # (with zero measurements attributed to THIS call).
+        results = self.flush(device)
+        with self._lock:
+            entry = self.registry.lookup(device, wl) or {}
+            sel = self._selections.get(device)
+            return HubResponse(device, wl, self.registry.get(device, wl),
+                               False, entry.get("throughput_gflops"),
+                               sum(r.total_measurements for r in results),
+                               sel.sources if sel is not None else [])
+
+    def _device_lock(self, device: str) -> threading.Lock:
+        with self._lock:
+            return self._dev_locks.setdefault(device, threading.Lock())
+
+    def flush(self, device: Optional[str] = None) -> List:
+        """Run one batched TuneSession job per device with pending work.
+        Returns the TuneResults. Jobs serialize per device (a second caller
+        blocks, then finds nothing pending and hits the registry); the hub
+        lock is only held to move keys between pending and in-flight, so
+        serving other devices' hits is never blocked by a running job."""
+        results = []
+        with self._lock:
+            devices = ([device] if device is not None
+                       else sorted(self._pending))
+        for dev in devices:
+            with self._device_lock(dev):
+                with self._lock:
+                    tasks = list(self._pending.pop(dev, {}).values())
+                    keys = {(dev, wl.key()) for wl in tasks}
+                    self._inflight |= keys
+                if not tasks:
+                    continue
+                try:
+                    results.append(self._tune_batch(dev, tasks))
+                finally:
+                    with self._lock:
+                        self._inflight -= keys
+        return results
+
+    def selection(self, device: str) -> Optional[SourceSelection]:
+        """The source selection used for `device`'s jobs, if one was made."""
+        return self._selections.get(device)
+
+    # --- the miss path ----------------------------------------------------
+    def _selection_for(self, device: str) -> SourceSelection:
+        """Fingerprint-driven source selection, computed once per device and
+        persisted (fingerprint + any freshly pretrained params) so later
+        misses — and later hub processes — warm-start instantly."""
+        sel = self._selections.get(device)
+        if sel is not None:
+            return sel
+        fp = self.store.get_fingerprint(device)
+        if fp is None:
+            fp = device_fingerprint(device)
+            self.store.put_fingerprint(device, fp)
+        sel = select_sources(self.store, device, top_k=self.top_k_sources,
+                             model_name=self.cost_model_name,
+                             target_fingerprint=fp, seed=self.seed)
+        if sel.pretrained_params is None and sel.pool is not None:
+            model = resolve_cost_model(self.cost_model_name,
+                                       self.moses_cfg.cost_model)
+            params = model.init(jax.random.PRNGKey(self.seed))
+            params, _ = model.train(params, sel.pool,
+                                    epochs=self.pretrain_epochs,
+                                    seed=self.seed)
+            sel.pretrained_params = params
+            sel.params_device = sel.best_source
+            # keyed by the source device: its corpus trained these params
+            self.store.save_model_params(sel.best_source, params,
+                                         self.cost_model_name)
+        self._selections[device] = sel
+        return sel
+
+    def _tune_batch(self, device: str, tasks: Sequence[Workload]):
+        sel = self._selection_for(device)
+        # resolved fresh per job: Strategy instances carry per-job state
+        strategy: Union[str, Strategy] = resolve_strategy(self.strategy)
+        if sel.pretrained_params is None and strategy.requires_pretrained:
+            # cold universe: nothing to transfer from — fall back to the
+            # from-scratch online baseline rather than failing the job
+            strategy = "ansor-random"
+        session = TuneSession(
+            moses_cfg=self.moses_cfg,
+            pretrained_params=sel.pretrained_params,
+            source_pool=sel.pool,
+            seed=self.seed,
+            trials_per_task=self.trials_per_task,
+            registry=self.registry,
+            store=self.store,
+            cost_model=self.cost_model_name)
+        result = session.run(tasks, device, strategy)
+        self.stats.jobs += 1
+        self.stats.measurements += result.total_measurements
+        self.registry.save()
+        self.store.flush()
+        return result

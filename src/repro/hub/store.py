@@ -1,0 +1,336 @@
+"""Append-only on-disk record store: the hub's persistent measurement corpus.
+
+Every on-device measurement (simulated `Perf()` trial) the system ever makes
+is worth keeping — TCL and TLP both show that a growing cross-device corpus
+is what makes new cost models cheap to stand up. The seed pipeline threw its
+record pools away per run; this store accumulates them instead:
+
+  <root>/records/<device>/<task-shard>.jsonl    one JSON record per line
+  <root>/fingerprints.json                      device -> probe vector
+  <root>/params/<device>.npz                    pretrained cost-model params
+
+Shards are keyed by (device, task): a tuning job touches one device and a
+handful of tasks, so writes stay local and a reader can load exactly the
+devices/tasks it needs. Writes are atomic (full-shard rewrite to a temp file
++ `os.replace`), so a crash mid-flush never corrupts an existing shard.
+Records are deduplicated on (task, config knobs, trial) — re-measuring the
+same point is a no-op. Every record carries `schema`; loading a record with
+an unknown schema version raises `StoreSchemaError` rather than silently
+misinterpreting it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.autotune.space import ProgramConfig, Workload
+from repro.core.cost_model import (Records, load_params, normalize_per_task,
+                                   save_params)
+from repro.core.features import FEATURE_DIM, extract_features
+
+SCHEMA_VERSION = 1
+
+
+class StoreSchemaError(ValueError):
+    """A shard holds records written under an incompatible schema version."""
+
+
+def _shard_name(task_key: str) -> str:
+    """Filesystem-safe shard file name for a task key."""
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", task_key) + ".jsonl"
+
+
+def workload_from_record(rec: Dict[str, Any]) -> Workload:
+    t = rec["task"]
+    return Workload(t["kind"], tuple(int(d) for d in t["dims"]),
+                    name=t.get("name", ""), count=int(t.get("count", 1)),
+                    dtype_bytes=int(t.get("dtype_bytes", 2)))
+
+
+def _record_dict(device: str, wl: Workload, cfg: ProgramConfig,
+                 throughput: float, trial: int) -> Dict[str, Any]:
+    return {
+        "schema": SCHEMA_VERSION,
+        "device": device,
+        "task": {"kind": wl.kind, "dims": list(wl.dims), "name": wl.name,
+                 "count": wl.count, "dtype_bytes": wl.dtype_bytes},
+        "knobs": {k: int(v) for k, v in cfg.knobs},
+        "throughput_gflops": float(throughput),
+        "trial": int(trial),
+    }
+
+
+def _dedup_key(rec: Dict[str, Any]) -> Tuple:
+    return (tuple(sorted((k, int(v)) for k, v in rec["knobs"].items())),
+            int(rec.get("trial", 0)))
+
+
+def _load_shard_file(path: str) -> List[Dict[str, Any]]:
+    """Parse one JSONL shard, validating the schema of every record. A torn
+    trailing line (a writer killed mid-append under older layouts) is
+    dropped; torn interior lines and unknown schemas are hard errors."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    out: List[Dict[str, Any]] = []
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                continue
+            raise StoreSchemaError(f"corrupt record in {path}:{i + 1}")
+        if rec.get("schema") != SCHEMA_VERSION:
+            raise StoreSchemaError(
+                f"{path}:{i + 1} has schema {rec.get('schema')!r}; this "
+                f"build reads schema {SCHEMA_VERSION}")
+        out.append(rec)
+    return out
+
+
+class RecordStore:
+    """Append-only measurement store with buffered, atomic, deduped writes.
+
+    `put()` buffers; `flush()` persists every dirty shard atomically. Reads
+    (`iter_device`, `records`) see buffered + persisted records. One store
+    instance is safe to share across threads (a single internal lock guards
+    buffer and index state; flush rewrites shards under it).
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        self._lock = threading.RLock()
+        # (device, task_key) -> buffered (not yet flushed) records
+        self._buffer: Dict[Tuple[str, str], List[Dict[str, Any]]] = {}
+        # (device, task_key) -> dedup keys already present (lazy)
+        self._index: Dict[Tuple[str, str], set] = {}
+        # path -> ((mtime_ns, size), parsed records): repeated reads of a
+        # growing corpus (count + records per select_sources query) parse
+        # each shard once until it changes on disk
+        self._shard_cache: Dict[str, Tuple[Tuple[int, int],
+                                           List[Dict[str, Any]]]] = {}
+
+    # --- paths ------------------------------------------------------------
+    def _records_dir(self, device: str) -> str:
+        return os.path.join(self.root, "records", device)
+
+    def _shard_path(self, device: str, task_key: str) -> str:
+        return os.path.join(self._records_dir(device), _shard_name(task_key))
+
+    def _load_shard_cached(self, path: str) -> List[Dict[str, Any]]:
+        try:
+            st = os.stat(path)
+        except OSError:
+            return []
+        stamp = (st.st_mtime_ns, st.st_size)
+        with self._lock:
+            hit = self._shard_cache.get(path)
+            if hit is not None and hit[0] == stamp:
+                return hit[1]
+        recs = _load_shard_file(path)
+        with self._lock:
+            self._shard_cache[path] = (stamp, recs)
+        return recs
+
+    # --- writes -----------------------------------------------------------
+    def _ensure_index(self, device: str, task_key: str) -> set:
+        key = (device, task_key)
+        if key not in self._index:
+            self._index[key] = {
+                _dedup_key(r) for r in self._load_shard_cached(
+                    self._shard_path(device, task_key))}
+        return self._index[key]
+
+    def put(self, device: str, wl: Workload, cfg: ProgramConfig,
+            throughput: float, trial: int = 0) -> bool:
+        """Buffer one measured record; returns False on a dedup hit."""
+        rec = _record_dict(device, wl, cfg, throughput, trial)
+        with self._lock:
+            idx = self._ensure_index(device, wl.key())
+            dk = _dedup_key(rec)
+            if dk in idx:
+                return False
+            idx.add(dk)
+            self._buffer.setdefault((device, wl.key()), []).append(rec)
+            return True
+
+    def put_many(self, device: str,
+                 rows: Iterable[Tuple[Workload, ProgramConfig, float]],
+                 trial: int = 0) -> int:
+        return sum(self.put(device, wl, cfg, thr, trial=trial)
+                   for wl, cfg, thr in rows)
+
+    def put_result(self, result) -> int:
+        """Persist every measurement a `TuneResult` carries, under its real
+        trial index (results produced before the `measured` field existed
+        contribute nothing)."""
+        n = 0
+        for t in result.tasks:
+            for cfg, thr, trial in (t.measured or []):
+                n += self.put(result.device, t.workload, cfg, thr,
+                              trial=trial)
+        return n
+
+    def flush(self) -> int:
+        """Atomically persist all buffered records; returns records written.
+
+        Each dirty shard is rewritten in full to `<shard>.tmp` and moved into
+        place with `os.replace`, so readers (and crashes) only ever observe a
+        complete shard.
+        """
+        with self._lock:
+            written = 0
+            for (device, task_key), pending in sorted(self._buffer.items()):
+                if not pending:
+                    continue
+                path = self._shard_path(device, task_key)
+                existing = self._load_shard_cached(path)
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                tmp = path + ".tmp"
+                with open(tmp, "w") as f:
+                    for rec in existing + pending:
+                        f.write(json.dumps(rec, sort_keys=True) + "\n")
+                os.replace(tmp, path)
+                written += len(pending)
+            self._buffer.clear()
+            return written
+
+    # --- reads ------------------------------------------------------------
+    def devices(self) -> List[str]:
+        with self._lock:
+            devs = {d for (d, _), recs in self._buffer.items() if recs}
+        rec_root = os.path.join(self.root, "records")
+        if os.path.isdir(rec_root):
+            devs.update(d for d in os.listdir(rec_root)
+                        if os.path.isdir(os.path.join(rec_root, d)))
+        return sorted(devs)
+
+    def _iter_persisted(self, device: str):
+        d = self._records_dir(device)
+        if not os.path.isdir(d):
+            return
+        for name in sorted(os.listdir(d)):
+            if name.endswith(".jsonl"):
+                yield from self._load_shard_cached(os.path.join(d, name))
+
+    def iter_device(self, device: str):
+        """All records for a device: persisted shards, then buffered."""
+        yield from self._iter_persisted(device)
+        with self._lock:
+            pending = [r for (d, _), recs in sorted(self._buffer.items())
+                       if d == device for r in recs]
+        yield from pending
+
+    def count(self, device: str) -> int:
+        return sum(1 for _ in self.iter_device(device))
+
+    def task_keys(self, device: str) -> List[str]:
+        return sorted({workload_from_record(r).key()
+                       for r in self.iter_device(device)})
+
+    def records(self, device: str,
+                task_keys: Optional[Sequence[str]] = None) -> Records:
+        """Materialize a device's corpus as a featurized `Records` set.
+
+        Group ids index task keys within this device (per-task label
+        normalization is per device here; cross-device pools must offset
+        group ids — see `transfer.select_sources`).
+        """
+        wanted = set(task_keys) if task_keys is not None else None
+        feats, raw, gids = [], [], []
+        gid_of: Dict[str, int] = {}
+        for rec in self.iter_device(device):
+            wl = workload_from_record(rec)
+            key = wl.key()
+            if wanted is not None and key not in wanted:
+                continue
+            cfg = ProgramConfig(tuple(sorted(
+                (k, int(v)) for k, v in rec["knobs"].items())))
+            gid = gid_of.setdefault(key, len(gid_of))
+            feats.append(extract_features(wl, cfg))
+            raw.append(float(rec["throughput_gflops"]))
+            gids.append(gid)
+        if not feats:
+            return Records(x=np.zeros((0, FEATURE_DIM), np.float32),
+                           y=np.zeros((0,), np.float32),
+                           g=np.zeros((0,), np.int32),
+                           raw_throughput=np.zeros((0,), np.float32))
+        raw_arr = np.asarray(raw, np.float32)
+        g = np.asarray(gids, np.int32)
+        return Records(x=np.stack(feats), y=normalize_per_task(raw_arr, g),
+                       g=g, raw_throughput=raw_arr)
+
+    # --- fingerprints -----------------------------------------------------
+    def _fingerprint_path(self) -> str:
+        return os.path.join(self.root, "fingerprints.json")
+
+    def fingerprints(self) -> Dict[str, np.ndarray]:
+        """Persisted fingerprints. A file written under a different probe
+        suite (`PROBE_VERSION`) is treated as absent — callers re-probe and
+        overwrite — while an unknown store schema is a hard error."""
+        from repro.hub.fingerprint import PROBE_VERSION
+        path = self._fingerprint_path()
+        if not os.path.exists(path):
+            return {}
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("schema") != SCHEMA_VERSION:
+            raise StoreSchemaError(f"{path} has schema {data.get('schema')!r}")
+        if data.get("probe_version") != PROBE_VERSION:
+            return {}
+        return {d: np.asarray(v, np.float32)
+                for d, v in data.get("devices", {}).items()}
+
+    def put_fingerprint(self, device: str, vec: np.ndarray) -> None:
+        from repro.hub.fingerprint import PROBE_VERSION
+        with self._lock:
+            fps = self.fingerprints()
+            fps[device] = np.asarray(vec, np.float32)
+            os.makedirs(self.root, exist_ok=True)
+            tmp = self._fingerprint_path() + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"schema": SCHEMA_VERSION,
+                           "probe_version": PROBE_VERSION,
+                           "devices": {d: [float(x) for x in v]
+                                       for d, v in sorted(fps.items())}},
+                          f, indent=1, sort_keys=True)
+            os.replace(tmp, self._fingerprint_path())
+
+    def get_fingerprint(self, device: str) -> Optional[np.ndarray]:
+        return self.fingerprints().get(device)
+
+    # --- pretrained cost-model params -------------------------------------
+    def _params_path(self, device: str) -> str:
+        return os.path.join(self.root, "params", f"{device}.npz")
+
+    def save_model_params(self, device: str, params, model_name: str) -> str:
+        """Persist cost-model params keyed by the device whose corpus trained
+        them, tagged with the model family so a loader can refuse a
+        mismatch."""
+        path = self._params_path(device)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        save_params(path, params,
+                    meta={"model": model_name, "schema": SCHEMA_VERSION})
+        return path
+
+    def load_model_params(self, device: str,
+                          model_name: Optional[str] = None):
+        """Load persisted params for `device`, or None. When `model_name` is
+        given, params saved for a different model family are treated as
+        absent (architectures differ; loading them would crash downstream)."""
+        path = self._params_path(device)
+        if not os.path.exists(path):
+            return None
+        params, meta = load_params(path)
+        if model_name is not None and meta.get("model") not in (None,
+                                                                model_name):
+            return None
+        return params

@@ -1,3 +1,4 @@
 # Launchers: mesh.py (production mesh), dryrun.py (512-device lower+compile;
 # sets XLA_FLAGS itself -- do not import jax before running it), roofline.py,
-# train.py, serve.py. Nothing here touches jax device state at import time.
+# train.py, serve.py, hub.py (transfer-hub serving/smoke/stats). Nothing here
+# touches jax device state at import time.

@@ -1,0 +1,154 @@
+"""Transfer-hub launcher: serve, inspect, and smoke-test the TuningHub.
+
+    PYTHONPATH=src python -m repro.launch.hub --smoke [--root DIR]
+    PYTHONPATH=src python -m repro.launch.hub --stats [--root DIR]
+    PYTHONPATH=src python -m repro.launch.hub --device tpu_lite \
+        --dnn squeezenet --trials 32 [--bootstrap tpu_v5e,tpu_edge]
+
+--smoke is the CI leg: a tiny-budget end-to-end pass — bootstrap a two-device
+store, fingerprint a device *absent* from it, warm-start Moses from the
+auto-selected nearest source, then prove the second `get_config` for the same
+(device, workload) is a registry hit with zero new measurements. It tolerates
+a warm (cached) hub root: with everything already tuned, the first call is
+simply a hit too. Exits non-zero if any serving invariant fails.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+from repro.autotune.space import Workload
+from repro.configs.moses import DEFAULT as MOSES_CFG
+
+
+def _smoke_cfg():
+    """Tiny-budget Moses hyperparameters: the full pipeline, CI-sized."""
+    return dataclasses.replace(
+        MOSES_CFG, online_epochs=4, adaptation_epochs=4, population_size=32,
+        evolution_rounds=2, top_k_measure=8)
+
+
+def _smoke_tasks():
+    return [Workload("matmul", (256, 256, 128), name="smoke_a"),
+            Workload("matmul", (512, 256, 128), name="smoke_b")]
+
+
+def run_smoke(root: str) -> int:
+    from repro.hub import TuningHub, bootstrap_store
+
+    t0 = time.time()
+    hub = TuningHub(root, moses_cfg=_smoke_cfg(), trials_per_task=16,
+                    pretrain_epochs=4)
+    boot = bootstrap_store(hub.store, ("tpu_v5e", "tpu_edge"),
+                           _smoke_tasks(), programs_per_task=16)
+    print(f"[hub-smoke] store at {hub.store.root}: "
+          f"{boot} new bootstrap records; devices={hub.store.devices()}")
+
+    target = "tpu_v5e_pro"   # absent from the bootstrap set
+    wl = _smoke_tasks()[0]
+    r1 = hub.get_config(target, wl)
+    print(f"[hub-smoke] first  get_config({target}, {wl.key()}): "
+          f"hit={r1.cache_hit} new_measurements={r1.new_measurements} "
+          f"sources={[(d, round(w, 3)) for d, w in r1.sources]}")
+    sel = hub.selection(target)
+    if not r1.cache_hit:
+        assert sel is not None and sel.best_source == "tpu_v5e", (
+            f"nearest-source selection picked {sel and sel.best_source!r}, "
+            "expected the near-class tpu_v5e")
+        assert r1.new_measurements > 0, "miss path made no measurements"
+
+    r2 = hub.get_config(target, wl)
+    print(f"[hub-smoke] second get_config: hit={r2.cache_hit} "
+          f"new_measurements={r2.new_measurements}")
+    assert r2.cache_hit, "second query must be a registry hit"
+    assert r2.new_measurements == 0, "a hit must cost zero measurements"
+    assert r2.config.knobs == r1.config.knobs, "hit must serve the winner"
+    assert hub.store.get_fingerprint(target) is not None, (
+        "target fingerprint was not persisted")
+
+    print(f"[hub-smoke] OK in {time.time() - t0:.1f}s — stats: {hub.stats}")
+    return 0
+
+
+def print_stats(root: str) -> int:
+    from repro.hub import RecordStore
+    store = RecordStore(f"{root}/store")
+    devs = store.devices()
+    print(f"store {store.root}: {len(devs)} device(s)")
+    for d in devs:
+        print(f"  {d:14s} {store.count(d):6d} records, "
+              f"{len(store.task_keys(d)):4d} tasks")
+    fps = store.fingerprints()
+    if fps:
+        print(f"fingerprints: {sorted(fps)}")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default="artifacts/hub",
+                    help="hub root (store + registry + params)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-budget end-to-end serving check (CI leg)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print record-store statistics and exit")
+    ap.add_argument("--device", default=None,
+                    help="serve/tune configs for this device")
+    ap.add_argument("--dnn", default=None,
+                    help="tune a paper DNN task suite (e.g. squeezenet)")
+    ap.add_argument("--arch", default=None,
+                    help="tune an LM architecture's task suite")
+    ap.add_argument("--trials", type=int, default=48)
+    ap.add_argument("--strategy", default="moses")
+    ap.add_argument("--bootstrap", default=None,
+                    help="comma-separated devices to seed the store with "
+                         "before serving (skips devices that have records)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        return run_smoke(args.root)
+    if args.stats:
+        return print_stats(args.root)
+    if not args.device:
+        print("nothing to do: pass --smoke, --stats, or --device "
+              "(see --help)", file=sys.stderr)
+        return 2
+
+    from repro.autotune.tasks import arch_tasks, paper_dnn_tasks
+    from repro.hub import TuningHub, bootstrap_store
+    if args.dnn:
+        tasks = paper_dnn_tasks(args.dnn)
+    elif args.arch:
+        from repro.configs import get_config
+        tasks = arch_tasks(get_config(args.arch))
+    else:
+        print("--device needs a task suite: --dnn or --arch",
+              file=sys.stderr)
+        return 2
+
+    hub = TuningHub(args.root, trials_per_task=args.trials,
+                    strategy=args.strategy)
+    if args.bootstrap:
+        n = bootstrap_store(hub.store, args.bootstrap.split(","), tasks)
+        print(f"[hub] bootstrapped {n} records")
+    queued = sum(hub.request(args.device, wl) for wl in tasks)
+    print(f"[hub] {queued} task(s) queued ({len(tasks) - queued} already "
+          f"served/pending) for {args.device}")
+    results = hub.flush(args.device)
+    sel = hub.selection(args.device)
+    if sel is not None:
+        print(f"[hub] sources for {args.device}: "
+              f"{[(d, round(w, 3)) for d, w in sel.sources]} "
+              f"(ranked {[(d, round(s, 3)) for d, s in sel.ranked]})")
+    for r in results:
+        print(f"[hub] job: {len(r.tasks)} task(s), "
+              f"{r.total_measurements} measurements, "
+              f"{r.total_search_seconds:.1f}s simulated search time")
+    print(f"[hub] registry -> {hub.registry.path}; stats: {hub.stats}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,10 @@
 --smoke uses the reduced same-family config (CPU-runnable); full configs need
 the production mesh. --autotune runs Moses cost-model adaptation for the
 target device first and persists tuned kernel configs to the registry (the
-paper's pipeline as a pre-training step of the launcher).
+paper's pipeline as a pre-training step of the launcher). --source picks the
+transfer source: a device name, or 'auto' to route through the transfer hub
+(fingerprint the target, warm-start from the nearest measured device in the
+persistent store; see src/repro/hub/).
 """
 from __future__ import annotations
 
@@ -25,21 +28,46 @@ from repro.train.optimizer import AdamW, AdamWConfig, cosine_schedule
 from repro.train.train_loop import LoopConfig, run_training
 
 
-def maybe_autotune(device: str, cfg):
+def maybe_autotune(device: str, cfg, source: str = None,
+                   hub_root: str = "artifacts/hub"):
     from repro.autotune.dataset import generate_records, training_task_pool
     from repro.autotune.registry import Registry
     from repro.autotune.tasks import arch_tasks
     from repro.autotune.tuner import tune
     from repro.core.cost_model import resolve_cost_model
 
-    print(f"[autotune] Moses adaptation {MOSES_CFG.source_device} -> {device}")
+    tasks = arch_tasks(cfg)
+    if source == "auto":
+        # route through the transfer hub: fingerprint the target, pick the
+        # nearest measured source(s) from the persistent store (bootstrapping
+        # the stock source corpus on first run), tune on miss, and persist
+        # winners into the kernels' default registry
+        from repro.hub import TuningHub, bootstrap_store
+        print(f"[autotune] Moses adaptation auto -> {device} "
+              f"(hub at {hub_root})")
+        hub = TuningHub(hub_root, moses_cfg=MOSES_CFG, registry=Registry(),
+                        trials_per_task=48)
+        bootstrap_store(hub.store, [MOSES_CFG.source_device],
+                        training_task_pool(include_archs=False),
+                        programs_per_task=16)
+        queued = sum(hub.request(device, wl) for wl in tasks)
+        results = hub.flush(device)
+        sel = hub.selection(device)
+        if sel is not None:
+            print(f"[autotune] sources: "
+                  f"{[(d, round(w, 3)) for d, w in sel.sources]}")
+        n = sum(len(r.tasks) for r in results)
+        print(f"[autotune] tuned {n} tasks -> {hub.registry.path} "
+              f"({len(tasks) - queued} already served)")
+        return
+
+    src_device = source or MOSES_CFG.source_device
+    print(f"[autotune] Moses adaptation {src_device} -> {device}")
     pool = training_task_pool(include_archs=False)
-    src = generate_records(pool, MOSES_CFG.source_device,
-                           programs_per_task=24, seed=0)
+    src = generate_records(pool, src_device, programs_per_task=24, seed=0)
     model = resolve_cost_model("mlp", MOSES_CFG.cost_model)
     params = model.init(jax.random.PRNGKey(0))
     params, _ = model.train(params, src, epochs=10)
-    tasks = arch_tasks(cfg)
     result = tune(tasks, device, "moses", MOSES_CFG, trials_per_task=48,
                   pretrained_params=params, source_pool=src,
                   cost_model=model)
@@ -62,6 +90,12 @@ def main():
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--autotune", default=None,
                     help="target device for Moses kernel tuning")
+    ap.add_argument("--source", default=None,
+                    help="source device for --autotune transfer, or 'auto' "
+                         "to select the nearest measured device via the "
+                         "transfer hub's fingerprint ranking")
+    ap.add_argument("--hub-root", default="artifacts/hub",
+                    help="transfer-hub root used by --source auto")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -75,7 +109,8 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.autotune:
-        maybe_autotune(args.autotune, cfg)
+        maybe_autotune(args.autotune, cfg, source=args.source,
+                       hub_root=args.hub_root)
 
     mesh = (make_production_mesh(multi_pod=args.multi_pod)
             if args.production_mesh else

@@ -1,0 +1,358 @@
+"""Transfer Hub tests: record-store persistence invariants, fingerprint
+determinism (in- and cross-process), source-selection ranking sanity,
+TuningHub serving semantics (hit / miss / in-flight dedup / batching), and
+the registry atomicity + locking satellites.
+
+The end-to-end acceptance path lives in TestTuningHub.test_unseen_device_e2e:
+a device absent from the store is fingerprinted, Moses warm-starts from the
+auto-selected nearest source, and the second get_config for the same
+(device, workload) is a registry hit with zero new measurements.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.autotune.space import ProgramConfig, Workload, default_config
+from repro.configs.moses import DEFAULT as MCFG
+from repro.hub import (RecordStore, StoreSchemaError, TuningHub,
+                       bootstrap_store, device_fingerprint,
+                       fingerprint_similarity, probe_suite, select_sources)
+from repro.hub.store import SCHEMA_VERSION
+
+WL_A = Workload("matmul", (256, 256, 128), name="a")
+WL_B = Workload("matmul", (512, 256, 128), name="b")
+CFG_A = default_config(WL_A)
+CFG_A2 = ProgramConfig.make(block_m=64, block_n=128, block_k=128,
+                            k_inner=0, unroll=1, out_bf16=1)
+
+TINY_CFG = dataclasses.replace(
+    MCFG, online_epochs=2, adaptation_epochs=2, population_size=32,
+    evolution_rounds=2, top_k_measure=8)
+
+
+def _boot(store, devices=("tpu_v5e", "tpu_edge"), n=8):
+    return bootstrap_store(store, devices, [WL_A, WL_B],
+                           programs_per_task=n)
+
+
+class TestRecordStore:
+    def test_round_trip(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        assert store.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        assert store.put("tpu_v5e", WL_A, CFG_A2, 50.0)
+        assert store.put("tpu_v5e", WL_B, CFG_A, 75.0)
+        assert store.flush() == 3
+        loaded = RecordStore(str(tmp_path / "s"))
+        assert loaded.devices() == ["tpu_v5e"]
+        assert loaded.count("tpu_v5e") == 3
+        assert loaded.task_keys("tpu_v5e") == sorted(
+            [WL_A.key(), WL_B.key()])
+        recs = loaded.records("tpu_v5e")
+        assert len(recs) == 3
+        assert recs.x.shape[1] == 164
+        assert sorted(recs.raw_throughput.tolist()) == [50.0, 75.0, 100.0]
+        # per-task normalization: each task group's best record is 1.0
+        for g in np.unique(recs.g):
+            assert recs.y[recs.g == g].max() == pytest.approx(1.0)
+
+    def test_dedup_within_and_across_flushes(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        assert store.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        assert not store.put("tpu_v5e", WL_A, CFG_A, 101.0)  # same point
+        assert store.put("tpu_v5e", WL_A, CFG_A, 99.0, trial=1)  # new trial
+        store.flush()
+        # a fresh instance re-reads the shard index: still deduped
+        again = RecordStore(str(tmp_path / "s"))
+        assert not again.put("tpu_v5e", WL_A, CFG_A, 102.0)
+        assert again.count("tpu_v5e") == 2
+
+    def test_schema_version_rejected(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        store.flush()
+        shard = next(
+            os.path.join(r, f)
+            for r, _, fs in os.walk(tmp_path / "s" / "records")
+            for f in fs if f.endswith(".jsonl"))
+        with open(shard) as f:
+            rec = json.loads(f.readline())
+        rec["schema"] = SCHEMA_VERSION + 1
+        with open(shard, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        fresh = RecordStore(str(tmp_path / "s"))
+        with pytest.raises(StoreSchemaError):
+            list(fresh.iter_device("tpu_v5e"))
+
+    def test_torn_trailing_line_tolerated(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        store.flush()
+        shard = next(
+            os.path.join(r, f)
+            for r, _, fs in os.walk(tmp_path / "s" / "records")
+            for f in fs if f.endswith(".jsonl"))
+        with open(shard, "a") as f:
+            f.write('{"schema": 1, "knobs": {"trunc')  # killed writer
+        assert RecordStore(str(tmp_path / "s")).count("tpu_v5e") == 1
+
+    def test_crashed_flush_preserves_existing_shard(self, tmp_path,
+                                                    monkeypatch):
+        root = str(tmp_path / "s")
+        store = RecordStore(root)
+        store.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        store.flush()
+
+        def boom(*a, **k):
+            raise OSError("disk died mid-rename")
+
+        crashy = RecordStore(root)
+        crashy.put("tpu_v5e", WL_A, CFG_A2, 50.0)
+        monkeypatch.setattr("repro.hub.store.os.replace", boom)
+        with pytest.raises(OSError):
+            crashy.flush()
+        monkeypatch.undo()
+        assert RecordStore(root).count("tpu_v5e") == 1  # original intact
+
+    def test_model_params_roundtrip_and_family_check(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        params = {"w0": np.ones((3, 2), np.float32),
+                  "b0": np.zeros((2,), np.float32)}
+        store.save_model_params("tpu_v5e", params, "mlp")
+        out = store.load_model_params("tpu_v5e", model_name="mlp")
+        np.testing.assert_array_equal(np.asarray(out["w0"]), params["w0"])
+        # wrong family -> treated as absent
+        assert store.load_model_params("tpu_v5e",
+                                       model_name="residual-mlp") is None
+        assert store.load_model_params("tpu_edge") is None
+
+    def test_fingerprint_persistence(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        fp = device_fingerprint("tpu_v5e")
+        store.put_fingerprint("tpu_v5e", fp)
+        np.testing.assert_allclose(
+            RecordStore(str(tmp_path / "s")).get_fingerprint("tpu_v5e"), fp)
+
+    def test_stale_probe_version_invalidates_fingerprints(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.put_fingerprint("tpu_v5e", device_fingerprint("tpu_v5e"))
+        path = store._fingerprint_path()
+        with open(path) as f:
+            data = json.load(f)
+        data["probe_version"] = data.get("probe_version", 1) + 1
+        with open(path, "w") as f:
+            json.dump(data, f)
+        # written under a different probe suite -> treated as absent
+        assert RecordStore(str(tmp_path / "s")).fingerprints() == {}
+
+
+class TestFingerprint:
+    def test_suite_shape(self):
+        suite = probe_suite()
+        assert len(suite) == 16
+        fp = device_fingerprint("tpu_v5e")
+        assert fp.shape == (16,)
+        assert np.linalg.norm(fp) == pytest.approx(1.0, abs=1e-5)
+
+    def test_deterministic_in_process(self):
+        np.testing.assert_array_equal(device_fingerprint("tpu_edge"),
+                                      device_fingerprint("tpu_edge"))
+
+    def test_deterministic_across_processes(self):
+        code = ("from repro.hub.fingerprint import device_fingerprint;"
+                "import json;"
+                "print(json.dumps(device_fingerprint('tpu_v5e')"
+                ".astype(float).tolist()))")
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src)
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, check=True)
+        other = np.asarray(json.loads(out.stdout), np.float32)
+        np.testing.assert_array_equal(device_fingerprint("tpu_v5e"), other)
+
+    def test_near_clone_more_similar_than_dissimilar(self):
+        fp_t = device_fingerprint("tpu_v5e")
+        sim_clone = fingerprint_similarity(fp_t,
+                                           device_fingerprint("tpu_v5e_pro"))
+        sim_edge = fingerprint_similarity(fp_t,
+                                          device_fingerprint("tpu_edge"))
+        assert sim_clone > 0.99
+        assert sim_clone > sim_edge + 0.1
+
+
+class TestSourceSelection:
+    def test_ranking_prefers_near_clone(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        _boot(store, n=4)
+        sel = select_sources(store, "tpu_v5e_pro", top_k=2)
+        assert [d for d, _ in sel.ranked] == ["tpu_v5e", "tpu_edge"]
+        assert sel.best_source == "tpu_v5e"
+        weights = dict(sel.sources)
+        assert sum(weights.values()) == pytest.approx(1.0)
+        assert weights["tpu_v5e"] > weights["tpu_edge"]
+        # mixed pool keeps per-(device, task) groups disjoint
+        assert sel.pool is not None
+        assert len(np.unique(sel.pool.g)) == 4  # 2 tasks x 2 sources
+
+    def test_target_never_its_own_source(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        _boot(store, devices=("tpu_v5e",), n=4)
+        sel = select_sources(store, "tpu_v5e")
+        assert sel.sources == [] or "tpu_v5e" not in [d for d, _ in
+                                                      sel.sources]
+
+    def test_empty_store(self, tmp_path):
+        sel = select_sources(RecordStore(str(tmp_path / "s")), "tpu_v5e")
+        assert sel.sources == [] and sel.pool is None
+        assert sel.pretrained_params is None
+
+    def test_bootstrap_is_idempotent(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        n1 = _boot(store, n=4)
+        assert n1 > 0
+        assert _boot(store, n=4) == 0
+
+
+class TestTuningHub:
+    def _hub(self, tmp_path, boot=True):
+        hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                        trials_per_task=16, pretrain_epochs=2)
+        if boot:
+            _boot(hub.store)
+        return hub
+
+    def test_unseen_device_e2e(self, tmp_path):
+        """Acceptance: fingerprint an unseen device, warm-start Moses from
+        the auto-selected nearest source, then serve the second query from
+        the registry with zero new measurements."""
+        hub = self._hub(tmp_path)
+        target = "tpu_v5e_pro"
+        assert target not in hub.store.devices()
+
+        r1 = hub.get_config(target, WL_A)
+        assert not r1.cache_hit
+        assert r1.new_measurements > 0
+        sel = hub.selection(target)
+        assert sel is not None and sel.best_source == "tpu_v5e"
+        assert sel.pretrained_params is not None
+        assert hub.store.get_fingerprint(target) is not None
+        # winners persisted + all measurements written back into the store
+        assert os.path.exists(hub.registry.path)
+        assert hub.store.count(target) > 0
+
+        r2 = hub.get_config(target, WL_A)
+        assert r2.cache_hit
+        assert r2.new_measurements == 0
+        assert r2.config.knobs == r1.config.knobs
+        assert hub.stats.hits == 1 and hub.stats.misses == 1
+
+    def test_request_dedup_and_batched_flush(self, tmp_path):
+        hub = self._hub(tmp_path)
+        assert hub.request("tpu_v5e_pro", WL_A)
+        assert not hub.request("tpu_v5e_pro", WL_A)   # in-flight dedup
+        assert hub.stats.dedup_skips == 1
+        assert hub.request("tpu_v5e_pro", WL_B)
+        assert hub.pending("tpu_v5e_pro") == 2
+        results = hub.flush()
+        assert len(results) == 1 and hub.stats.jobs == 1  # ONE batched job
+        assert len(results[0].tasks) == 2
+        assert hub.pending() == 0
+        # both workloads now served from the registry
+        assert hub.get_config("tpu_v5e_pro", WL_A).cache_hit
+        assert hub.get_config("tpu_v5e_pro", WL_B).cache_hit
+        # a request for a served workload is refused without queueing
+        assert not hub.request("tpu_v5e_pro", WL_A)
+
+    def test_cold_universe_falls_back_to_online_baseline(self, tmp_path):
+        hub = self._hub(tmp_path, boot=False)   # empty store: nothing to
+        r = hub.get_config("tpu_v5e", WL_A)     # transfer from
+        assert not r.cache_hit and r.new_measurements > 0
+        assert hub.get_config("tpu_v5e", WL_A).cache_hit
+
+    def test_cold_universe_fallback_any_pretrained_strategy(self, tmp_path):
+        # any strategy that requires pretrained params degrades gracefully
+        # on an empty store, not just the literal "moses" name
+        hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                        trials_per_task=16, strategy="tenset-finetune")
+        r = hub.get_config("tpu_v5e", WL_A)
+        assert not r.cache_hit and r.new_measurements > 0
+
+    def test_concurrent_inflight_dedup(self, tmp_path):
+        import threading
+        hub = self._hub(tmp_path)
+        target = "tpu_v5e_pro"
+        first = {}
+
+        def serve():
+            first["r"] = hub.get_config(target, WL_A)
+
+        t = threading.Thread(target=serve)
+        t.start()
+        # wait until the first call's job is actually in flight
+        for _ in range(600):
+            with hub._lock:
+                if (target, WL_A.key()) in hub._inflight:
+                    break
+            import time
+            time.sleep(0.05)
+        else:
+            t.join()
+            pytest.skip("job finished before in-flight state was observed")
+        # second caller: deduped against the in-flight key, blocks on the
+        # device job lock, then serves the first job's winner with zero
+        # measurements attributed to it
+        r2 = hub.get_config(target, WL_A)
+        t.join()
+        assert r2.new_measurements == 0
+        assert r2.config.knobs == first["r"].config.knobs
+        assert hub.stats.dedup_skips >= 1
+        assert hub.stats.jobs == 1
+
+    def test_prefetch_without_flush(self, tmp_path):
+        hub = self._hub(tmp_path)
+        r = hub.get_config("tpu_v5e_pro", WL_A, flush=False)
+        assert not r.cache_hit
+        assert r.new_measurements == 0
+        assert r.config.knobs == default_config(WL_A).knobs
+        assert hub.pending("tpu_v5e_pro") == 1
+
+
+class TestRegistrySatellites:
+    def _reg(self, path):
+        from repro.autotune.registry import Registry
+        return Registry(path=path)
+
+    def test_lookup_distinguishes_miss_from_default(self, tmp_path):
+        reg = self._reg(str(tmp_path / "r.json"))
+        assert reg.lookup("tpu_v5e", WL_A) is None
+        assert reg.get("tpu_v5e", WL_A).knobs == default_config(WL_A).knobs
+        reg.put("tpu_v5e", WL_A, CFG_A, 123.0)
+        entry = reg.lookup("tpu_v5e", WL_A)
+        assert entry is not None
+        assert entry["throughput_gflops"] == 123.0
+
+    def test_crashed_save_never_corrupts_existing_file(self, tmp_path,
+                                                       monkeypatch):
+        path = str(tmp_path / "r.json")
+        reg = self._reg(path)
+        reg.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        reg.save()
+
+        # crash INSIDE serialization: the destination file must survive
+        def boom(*a, **k):
+            raise RuntimeError("killed mid-write")
+
+        reg.put("tpu_v5e", WL_B, CFG_A, 50.0)
+        monkeypatch.setattr("repro.autotune.registry.json.dump", boom)
+        with pytest.raises(RuntimeError):
+            reg.save()
+        monkeypatch.undo()
+        survivor = self._reg(path)
+        assert survivor.lookup("tpu_v5e", WL_A) is not None
+        assert survivor.get("tpu_v5e", WL_A).knobs == CFG_A.knobs
