@@ -12,6 +12,8 @@ Benchmarks (one per paper table/figure + system-level extras):
   dataset  embedded-device dataset generation          (paper §4.1)
   roofline per-(arch x shape x mesh) roofline table    (§Roofline; needs
            artifacts/dryrun from repro.launch.dryrun)
+  sched    scheduled vs serial tuning: best-latency-vs-budget curves and
+           the draft-then-verify reduction (benchmarks/sched_bench.py)
 """
 from __future__ import annotations
 
@@ -31,7 +33,8 @@ def main() -> None:
 
     from benchmarks import (crosstask, dataset_stats, fig4_inference_gain,
                             fig5_search_efficiency, fig6_ratio_ablation,
-                            kernels_bench, roofline_table, table1_cmat)
+                            kernels_bench, roofline_table, sched_bench,
+                            table1_cmat)
     from benchmarks.common import LARGE_TRIALS, SMALL_TRIALS
 
     small = 200 if args.full else SMALL_TRIALS
@@ -59,6 +62,7 @@ def main() -> None:
         "dataset": lambda: dataset_stats.main(24 if not args.full else 96),
         "crosstask": lambda: crosstask.main(trials=small),
         "roofline": roofline_table.main,
+        "sched": lambda: sched_bench.main(trials=small),
     }
     picked = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -145,6 +145,83 @@ class TuneSession:
             self.store.put_result(result)
         return result
 
+    def run_many(self, jobs: Union[Dict[str, Sequence[Workload]],
+                                   Sequence[Tuple[str, Sequence[Workload]]]],
+                 strategy: StrategySpec = "moses",
+                 scheduler: str = "gradient",
+                 trials_per_task: Optional[int] = None,
+                 budget_seconds: Optional[float] = None,
+                 total_trials: Optional[int] = None,
+                 sched=None, executor=None, speculative: bool = False,
+                 salt: str = "", return_campaign: bool = False,
+                 **campaign_kwargs):
+        """Tune several (device, task-list) jobs as ONE campaign.
+
+        `scheduler="serial"` reproduces the legacy behavior — one `run()`
+        per device in job order, each task getting the full
+        `trials_per_task`. `scheduler="gradient"` hands the whole job set to
+        `repro.sched.run_campaign`: measurement rounds are allocated by
+        marginal gain per simulated second under a global budget
+        (`total_trials` defaults to the serial spend; `budget_seconds`
+        optionally caps simulated device-seconds), measurements run through
+        the async executor, and `speculative=True` screens candidates with
+        the draft-then-verify scorer.
+
+        Returns the per-device `TuneResult` list (job order); with
+        `return_campaign=True` returns the full `CampaignResult` (trace,
+        budget accounting, spec stats) instead. Either way results land in
+        `self.results` and the registry/store exactly like `run()`.
+        """
+        job_list = (list(jobs.items()) if isinstance(jobs, dict)
+                    else [(d, list(ts)) for d, ts in jobs])
+        if scheduler == "serial":
+            # fail loudly on campaign-only knobs instead of silently
+            # ignoring them — an A/B caller passing identical kwargs to
+            # both modes must not get an uncapped, unscreened serial run
+            dropped = {"budget_seconds": budget_seconds,
+                       "total_trials": total_trials, "sched": sched,
+                       "executor": executor,
+                       "speculative": speculative or None,
+                       "return_campaign": return_campaign or None,
+                       **campaign_kwargs}
+            dropped = {k: v for k, v in dropped.items() if v is not None}
+            if dropped:
+                raise ValueError(
+                    f"run_many(scheduler='serial') does not support "
+                    f"{sorted(dropped)}; use scheduler='gradient'")
+            return [self.run(tasks, device, strategy,
+                             trials_per_task=trials_per_task, salt=salt)
+                    for device, tasks in job_list]
+        if scheduler != "gradient":
+            raise ValueError(f"unknown scheduler {scheduler!r}; "
+                             "expected 'serial' or 'gradient'")
+        from repro.sched import run_campaign
+        trials = (trials_per_task if trials_per_task is not None
+                  else self.trials_per_task
+                  if self.trials_per_task is not None
+                  else self.moses_cfg.small_trials)
+        # per-task seeds ride the session's RNG-isolation policy: the salt
+        # carries the workload key so each task owns an independent stream
+        # (order-independent, like run()'s per-job derivation)
+        campaign = run_campaign(
+            job_list, self.moses_cfg, strategy=strategy,
+            cost_model=self.resolved_cost_model(),
+            pretrained_params=self.pretrained_params,
+            source_pool=self.source_pool, seed=self.seed,
+            trials_per_task=trials, budget_seconds=budget_seconds,
+            total_trials=total_trials, sched=sched, executor=executor,
+            speculative=speculative,
+            seed_fn=lambda dev, key: self.job_seed(
+                dev, strategy, salt=f"{key}|{salt}" if salt else key),
+            **campaign_kwargs)
+        for result in campaign.results:
+            self.results.append(result)
+            if self.registry is not None:
+                self.registry.ingest(result)
+            if self.store is not None:
+                self.store.put_result(result)
+        return campaign if return_campaign else campaign.results
+
     def run_matrix(self, task_sets: Dict[str, Sequence[Workload]],
                    devices: Dict[str, str],
                    strategies: Sequence[StrategySpec] = STRATEGIES,

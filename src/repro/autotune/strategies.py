@@ -123,6 +123,17 @@ class Strategy(abc.ABC):
     def begin_task(self, wl: Workload) -> None:
         """Reset per-task state; default none."""
 
+    def task_state(self):
+        """Snapshot of the strategy's per-task mutable state (the AC state
+        for moses), or None for strategies without any. The scheduled
+        engine swaps this in/out around `on_round` when several interleaved
+        tasks share one strategy instance, so per-task semantics (e.g. §3.5
+        early termination) survive the sharing."""
+        return None
+
+    def set_task_state(self, state) -> None:
+        """Restore a `task_state()` snapshot; default no-op."""
+
     def plan(self, trials: int) -> Tuple[List[int], int]:
         """Split a task's trial budget into measurement-batch sizes and
         prediction-only trials. Default: every trial is measured, in
@@ -212,6 +223,12 @@ class MosesStrategy(Strategy):
 
     def begin_task(self, wl: Workload) -> None:
         self.ac_state = ACState()
+
+    def task_state(self):
+        return self.ac_state
+
+    def set_task_state(self, state) -> None:
+        self.ac_state = state if state is not None else ACState()
 
     def plan(self, trials: int) -> Tuple[List[int], int]:
         return self.ac.plan(trials)

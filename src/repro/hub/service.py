@@ -74,7 +74,9 @@ class TuningHub:
                  trials_per_task: Optional[int] = None,
                  top_k_sources: int = 2,
                  pretrain_epochs: int = 6,
-                 seed: int = 0):
+                 seed: int = 0,
+                 scheduler: str = "serial",
+                 speculative: bool = False):
         self.root = root
         self.moses_cfg = moses_cfg
         self.store = store if store is not None else RecordStore(
@@ -87,6 +89,10 @@ class TuningHub:
         self.top_k_sources = top_k_sources
         self.pretrain_epochs = pretrain_epochs
         self.seed = seed
+        if scheduler not in ("serial", "gradient"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        self.scheduler = scheduler
+        self.speculative = speculative
         self.stats = HubStats()
         self._lock = threading.RLock()          # hub state (queues, stats)
         self._dev_locks: Dict[str, threading.Lock] = {}  # one job per device
@@ -114,6 +120,16 @@ class TuningHub:
             if device is not None:
                 return len(self._pending.get(device, {}))
             return sum(len(v) for v in self._pending.values())
+
+    def pending_by_device(self) -> Dict[str, int]:
+        """Queue depth per device (the `launch.hub --stats` surface)."""
+        with self._lock:
+            return {d: len(v) for d, v in sorted(self._pending.items()) if v}
+
+    def inflight(self) -> int:
+        """Number of (device, task) keys currently being tuned."""
+        with self._lock:
+            return len(self._inflight)
 
     # --- serving ----------------------------------------------------------
     def get_config(self, device: str, wl: Workload,
@@ -160,7 +176,13 @@ class TuningHub:
         Returns the TuneResults. Jobs serialize per device (a second caller
         blocks, then finds nothing pending and hits the registry); the hub
         lock is only held to move keys between pending and in-flight, so
-        serving other devices' hits is never blocked by a running job."""
+        serving other devices' hits is never blocked by a running job.
+
+        Drain order is deterministic regardless of request arrival order:
+        devices sort lexically and each device's tasks sort by workload key
+        before tuning, so two hubs fed the same work in different orders run
+        identical jobs (task order feeds the tuner's shared RNG stream) and
+        land identical registries."""
         results = []
         with self._lock:
             devices = ([device] if device is not None
@@ -168,7 +190,8 @@ class TuningHub:
         for dev in devices:
             with self._device_lock(dev):
                 with self._lock:
-                    tasks = list(self._pending.pop(dev, {}).values())
+                    tasks = sorted(self._pending.pop(dev, {}).values(),
+                                   key=lambda wl: wl.key())
                     keys = {(dev, wl.key()) for wl in tasks}
                     self._inflight |= keys
                 if not tasks:
@@ -231,7 +254,15 @@ class TuningHub:
             registry=self.registry,
             store=self.store,
             cost_model=self.cost_model_name)
-        result = session.run(tasks, device, strategy)
+        if self.scheduler == "gradient":
+            # several misses for one device become ONE scheduled campaign:
+            # measurement rounds flow to whichever pending workload still
+            # improves, instead of a fixed per-task budget
+            result = session.run_many([(device, tasks)], strategy=strategy,
+                                      scheduler="gradient",
+                                      speculative=self.speculative)[0]
+        else:
+            result = session.run(tasks, device, strategy)
         self.stats.jobs += 1
         self.stats.measurements += result.total_measurements
         self.registry.save()

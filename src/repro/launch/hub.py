@@ -72,9 +72,16 @@ def run_smoke(root: str) -> int:
     return 0
 
 
-def print_stats(root: str) -> int:
-    from repro.hub import RecordStore
-    store = RecordStore(f"{root}/store")
+def print_stats(root: str, hub=None) -> int:
+    """Store statistics + the serving queue (depth and per-device pending).
+
+    `hub` defaults to a fresh `TuningHub` over `root` — a new process has an
+    empty in-memory queue, but long-lived callers (tests, embedding servers)
+    pass their live hub to see real depths."""
+    from repro.hub import TuningHub
+    if hub is None:
+        hub = TuningHub(root)
+    store = hub.store
     devs = store.devices()
     print(f"store {store.root}: {len(devs)} device(s)")
     for d in devs:
@@ -83,6 +90,11 @@ def print_stats(root: str) -> int:
     fps = store.fingerprints()
     if fps:
         print(f"fingerprints: {sorted(fps)}")
+    per_dev = hub.pending_by_device()
+    print(f"queue: depth={hub.pending()} inflight={hub.inflight()} "
+          f"scheduler={hub.scheduler}")
+    for d, n in per_dev.items():
+        print(f"  {d:14s} {n:6d} pending")
     return 0
 
 

@@ -10,7 +10,11 @@ target device first and persists tuned kernel configs to the registry (the
 paper's pipeline as a pre-training step of the launcher). --source picks the
 transfer source: a device name, or 'auto' to route through the transfer hub
 (fingerprint the target, warm-start from the nearest measured device in the
-persistent store; see src/repro/hub/).
+persistent store; see src/repro/hub/). --scheduler gradient replaces the
+serial fixed-budget tuner with the scheduled campaign engine
+(src/repro/sched/): marginal-gain budget allocation, async measurement,
+draft-then-verify scoring. --dry-run runs the autotune path on a tiny budget
+and exits before training (the CI scheduler smoke leg).
 """
 from __future__ import annotations
 
@@ -29,7 +33,9 @@ from repro.train.train_loop import LoopConfig, run_training
 
 
 def maybe_autotune(device: str, cfg, source: str = None,
-                   hub_root: str = "artifacts/hub"):
+                   hub_root: str = "artifacts/hub",
+                   scheduler: str = "serial", trials: int = 48,
+                   dry_run: bool = False):
     from repro.autotune.dataset import generate_records, training_task_pool
     from repro.autotune.registry import Registry
     from repro.autotune.tasks import arch_tasks
@@ -37,6 +43,16 @@ def maybe_autotune(device: str, cfg, source: str = None,
     from repro.core.cost_model import resolve_cost_model
 
     tasks = arch_tasks(cfg)
+    moses_cfg = MOSES_CFG
+    if dry_run:
+        # CI fast path: exercise the full scheduler/executor/hub machinery
+        # on a CPU-minutes budget — two tasks, tiny search, shallow updates
+        import dataclasses
+        moses_cfg = dataclasses.replace(
+            MOSES_CFG, online_epochs=2, adaptation_epochs=2,
+            population_size=32, evolution_rounds=2, top_k_measure=8)
+        tasks = tasks[:2]
+        trials = min(trials, 16)
     if source == "auto":
         # route through the transfer hub: fingerprint the target, pick the
         # nearest measured source(s) from the persistent store (bootstrapping
@@ -44,12 +60,12 @@ def maybe_autotune(device: str, cfg, source: str = None,
         # winners into the kernels' default registry
         from repro.hub import TuningHub, bootstrap_store
         print(f"[autotune] Moses adaptation auto -> {device} "
-              f"(hub at {hub_root})")
-        hub = TuningHub(hub_root, moses_cfg=MOSES_CFG, registry=Registry(),
-                        trials_per_task=48)
-        bootstrap_store(hub.store, [MOSES_CFG.source_device],
+              f"(hub at {hub_root}, scheduler={scheduler})")
+        hub = TuningHub(hub_root, moses_cfg=moses_cfg, registry=Registry(),
+                        trials_per_task=trials, scheduler=scheduler)
+        bootstrap_store(hub.store, [moses_cfg.source_device],
                         training_task_pool(include_archs=False),
-                        programs_per_task=16)
+                        programs_per_task=8 if dry_run else 16)
         queued = sum(hub.request(device, wl) for wl in tasks)
         results = hub.flush(device)
         sel = hub.selection(device)
@@ -61,18 +77,36 @@ def maybe_autotune(device: str, cfg, source: str = None,
               f"({len(tasks) - queued} already served)")
         return
 
-    src_device = source or MOSES_CFG.source_device
-    print(f"[autotune] Moses adaptation {src_device} -> {device}")
+    src_device = source or moses_cfg.source_device
+    print(f"[autotune] Moses adaptation {src_device} -> {device} "
+          f"(scheduler={scheduler})")
     pool = training_task_pool(include_archs=False)
-    src = generate_records(pool, src_device, programs_per_task=24, seed=0)
-    model = resolve_cost_model("mlp", MOSES_CFG.cost_model)
+    src = generate_records(pool, src_device,
+                           programs_per_task=8 if dry_run else 24, seed=0)
+    model = resolve_cost_model("mlp", moses_cfg.cost_model)
     params = model.init(jax.random.PRNGKey(0))
-    params, _ = model.train(params, src, epochs=10)
-    result = tune(tasks, device, "moses", MOSES_CFG, trials_per_task=48,
-                  pretrained_params=params, source_pool=src,
-                  cost_model=model)
+    params, _ = model.train(params, src, epochs=2 if dry_run else 10)
     reg = Registry()
-    reg.ingest(result)
+    if scheduler == "gradient":
+        from repro.autotune.session import TuneSession
+        session = TuneSession(moses_cfg=moses_cfg, pretrained_params=params,
+                              source_pool=src, registry=reg,
+                              trials_per_task=trials)
+        campaign = session.run_many([(device, tasks)], strategy="moses",
+                                    scheduler="gradient", speculative=True,
+                                    return_campaign=True)
+        result = campaign.results[0]
+        print(f"[autotune] campaign: {campaign.total_measurements} "
+              f"measurements, {campaign.spent_seconds:.1f}s simulated "
+              f"device time ({campaign.wall_seconds:.1f}s parallel wall), "
+              f"{len(campaign.trace)} grants; draft acceptance "
+              f"{campaign.spec_stats.acceptance:.2f}, full-model calls cut "
+              f"{campaign.spec_stats.full_model_reduction:.1f}x")
+    else:
+        result = tune(tasks, device, "moses", moses_cfg,
+                      trials_per_task=trials, pretrained_params=params,
+                      source_pool=src, cost_model=model)
+        reg.ingest(result)
     reg.save()
     print(f"[autotune] tuned {len(result.tasks)} tasks -> {reg.path}")
 
@@ -96,6 +130,17 @@ def main():
                          "transfer hub's fingerprint ranking")
     ap.add_argument("--hub-root", default="artifacts/hub",
                     help="transfer-hub root used by --source auto")
+    ap.add_argument("--scheduler", default="serial",
+                    choices=("serial", "gradient"),
+                    help="--autotune engine: 'serial' tunes each task with "
+                         "a fixed budget; 'gradient' runs one scheduled "
+                         "campaign (marginal-gain budget allocation + async "
+                         "measurement + draft-then-verify scoring)")
+    ap.add_argument("--autotune-trials", type=int, default=48,
+                    help="per-task trial budget for --autotune")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="run the --autotune path on a tiny budget and exit "
+                         "before training (the CI scheduler smoke leg)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -108,9 +153,15 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.dry_run and not args.autotune:
+        ap.error("--dry-run needs --autotune DEVICE")
     if args.autotune:
         maybe_autotune(args.autotune, cfg, source=args.source,
-                       hub_root=args.hub_root)
+                       hub_root=args.hub_root, scheduler=args.scheduler,
+                       trials=args.autotune_trials, dry_run=args.dry_run)
+        if args.dry_run:
+            print("[dry-run] autotune path OK; skipping training")
+            return
 
     mesh = (make_production_mesh(multi_pod=args.multi_pod)
             if args.production_mesh else

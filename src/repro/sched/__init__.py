@@ -1,0 +1,29 @@
+"""Tuning Scheduler: multi-task budget allocation + async measurement.
+
+Three cooperating pieces (see docs/architecture.md, "Tuning Scheduler"):
+
+  * `scheduler.run_campaign` — gradient-based allocation of measurement
+    rounds across (device, workload) jobs under a global budget;
+  * `executor.MeasurementExecutor` — bounded thread-pool measurement
+    service with timeouts, retries, fault isolation, and deterministic
+    result ordering;
+  * `speculative.SpeculativeScorer` — Pruner-style draft-then-verify
+    candidate screening in front of the full cost model.
+
+`TuneSession.run_many(..., scheduler="gradient")` and
+`TuningHub(scheduler="gradient")` are the integration points.
+"""
+from repro.sched.engine import RoundStats, TaskTuner
+from repro.sched.executor import (MeasureOutcome, MeasureRequest,
+                                  MeasurementExecutor, batch_wall_seconds)
+from repro.sched.scheduler import (CampaignResult, SchedulerConfig,
+                                   TraceEntry, run_campaign)
+from repro.sched.speculative import (RandomFeatureDraft, RidgeDraft,
+                                     SpecStats, SpeculativeScorer)
+
+__all__ = [
+    "CampaignResult", "MeasureOutcome", "MeasureRequest",
+    "MeasurementExecutor", "RandomFeatureDraft", "RidgeDraft", "RoundStats",
+    "SchedulerConfig", "SpecStats", "SpeculativeScorer", "TaskTuner",
+    "TraceEntry", "batch_wall_seconds", "run_campaign",
+]

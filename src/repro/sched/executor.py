@@ -1,0 +1,220 @@
+"""Async measurement executor: a bounded thread-pool around `devices.measure`.
+
+On real hardware the measurement phase dominates tuning wall time (Chen et
+al., *Learning to Optimize Tensor Programs*): compile + transfer + run is
+hundreds of milliseconds to seconds per candidate, and a flaky board can hang
+a whole campaign. This module gives the tuning stack a measurement *service*
+with the failure semantics a production fleet needs:
+
+  * bounded submission queue — producers (the scheduler) block instead of
+    growing an unbounded backlog when measurement is the bottleneck;
+  * per-measurement timeout — a wedged measurement marks ITS result failed
+    and releases the waiter; the worker thread is never killed (CPython can't
+    preempt it) but a fresh request is never blocked behind the stale one;
+  * retry with exponential backoff — transient failures get `retries` more
+    attempts before the config is declared poisoned;
+  * fault isolation — a config whose measurement raises fails *its own*
+    outcome (`MeasureOutcome.error`), never the pool or the batch;
+  * deterministic ordering — `measure_batch` returns outcomes in submission
+    order regardless of worker completion order, and the simulated device's
+    noise is keyed on (config, trial), not execution order, so a parallel
+    campaign replays bit-identically to a serial one.
+
+The executor measures; it does not account time. Workers return the
+simulated `measurement_seconds` cost per outcome and `batch_wall_seconds`
+estimates the parallel makespan, so the scheduler charges simulated seconds
+(its budget currency) while real threads provide the concurrency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, List, Optional, Sequence
+
+from repro.autotune import devices as dev_mod
+from repro.autotune.space import ProgramConfig, Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureRequest:
+    """One measurement to run: identity is (workload, config, trial)."""
+    seq: int                    # submission index (result ordering key)
+    device: str
+    workload: Workload
+    config: ProgramConfig
+    trial: int = 0
+
+
+@dataclasses.dataclass
+class MeasureOutcome:
+    """What came back. `throughput` is None iff the measurement failed
+    (poisoned config, timeout, repeated errors); `seconds` is the simulated
+    on-device cost that was still paid for the attempt."""
+    request: MeasureRequest
+    throughput: Optional[float]
+    seconds: float
+    attempts: int
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.throughput is not None
+
+
+class _Slot:
+    """Single-result rendezvous between one worker and one waiter. First
+    writer wins: a result landing after the waiter timed out is dropped, so
+    a stale (wedged, then recovered) measurement can never be attributed to
+    a later request."""
+
+    def __init__(self, request: MeasureRequest, timeout_cost: float = 0.0):
+        self.request = request
+        # simulated seconds a timeout is charged — the board was occupied
+        # even though no result came back. Charging 0 would CHEAPEN wedged
+        # tasks in the scheduler's gain/cost priority and attract grants to
+        # exactly the tasks that produce nothing.
+        self.timeout_cost = timeout_cost
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._outcome: Optional[MeasureOutcome] = None
+
+    def offer(self, outcome: MeasureOutcome) -> None:
+        with self._lock:
+            if self._outcome is None:
+                self._outcome = outcome
+                self._event.set()
+
+    def wait(self, timeout: Optional[float]) -> MeasureOutcome:
+        if self._event.wait(timeout):
+            return self._outcome
+        timed_out = MeasureOutcome(
+            self.request, None, self.timeout_cost, attempts=0,
+            error=f"timeout after {timeout:.3f}s")
+        self.offer(timed_out)          # first writer wins
+        return self._outcome
+
+
+class MeasurementExecutor:
+    """Thread-pool measurement service with bounded queues and retries.
+
+    `measure_fn(wl, cfg, device, trial=)` and `seconds_fn(wl, cfg, device)`
+    default to the simulated device zoo; tests inject slow / flaky / poisoned
+    variants. Use as a context manager or call `shutdown()`.
+    """
+
+    def __init__(self, workers: int = 4, queue_size: int = 128,
+                 timeout_s: Optional[float] = None, retries: int = 1,
+                 backoff_s: float = 0.0,
+                 measure_fn: Optional[Callable] = None,
+                 seconds_fn: Optional[Callable] = None):
+        assert workers >= 1 and queue_size >= 1
+        self.workers = workers
+        self.timeout_s = timeout_s
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.measure_fn = measure_fn or dev_mod.measure
+        self.seconds_fn = seconds_fn or dev_mod.measurement_seconds
+        self._queue: "queue.Queue" = queue.Queue(maxsize=queue_size)
+        self._seq = 0
+        self._seq_lock = threading.Lock()
+        self._shutdown = False
+        self._threads = [
+            threading.Thread(target=self._worker, name=f"measure-{i}",
+                             daemon=True)
+            for i in range(workers)]
+        for t in self._threads:
+            t.start()
+
+    # --- worker side ------------------------------------------------------
+    def _attempt(self, req: MeasureRequest) -> MeasureOutcome:
+        attempts = 0
+        spent = 0.0     # every attempt occupies the board and is charged
+        while True:
+            attempts += 1
+            spent += self._cost_of(req)
+            try:
+                thr = float(self.measure_fn(req.workload, req.config,
+                                            req.device, trial=req.trial))
+                return MeasureOutcome(req, thr, spent, attempts)
+            except Exception as e:  # fault isolation: poison fails only itself
+                if attempts > self.retries:
+                    return MeasureOutcome(req, None, spent, attempts,
+                                          error=f"{type(e).__name__}: {e}")
+                if self.backoff_s > 0:
+                    time.sleep(self.backoff_s * (2 ** (attempts - 1)))
+
+    def _cost_of(self, req: MeasureRequest) -> float:
+        """Simulated seconds the attempt cost; a failure still pays (the
+        board was busy until it fell over)."""
+        try:
+            return float(self.seconds_fn(req.workload, req.config,
+                                         req.device))
+        except Exception:
+            return 0.0
+
+    def _worker(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:            # shutdown sentinel
+                self._queue.task_done()
+                return
+            slot: _Slot = item
+            try:
+                slot.offer(self._attempt(slot.request))
+            finally:
+                self._queue.task_done()
+
+    # --- caller side ------------------------------------------------------
+    def submit(self, wl: Workload, cfg: ProgramConfig, device: str,
+               trial: int = 0) -> _Slot:
+        """Enqueue one measurement; blocks when the bounded queue is full."""
+        if self._shutdown:
+            raise RuntimeError("executor is shut down")
+        with self._seq_lock:
+            seq = self._seq
+            self._seq += 1
+        req = MeasureRequest(seq, device, wl, cfg, trial)
+        slot = _Slot(req, timeout_cost=(self._cost_of(req)
+                                        if self.timeout_s is not None
+                                        else 0.0))
+        self._queue.put(slot)
+        return slot
+
+    def measure_batch(self, wl: Workload, cfgs: Sequence[ProgramConfig],
+                      device: str, trial: int = 0) -> List[MeasureOutcome]:
+        """Measure a candidate batch; outcomes come back in input order, so
+        downstream bookkeeping (records, trajectories, RNG) is independent
+        of worker interleaving."""
+        slots = [self.submit(wl, c, device, trial=trial) for c in cfgs]
+        return [s.wait(self.timeout_s) for s in slots]
+
+    def shutdown(self, wait: bool = True) -> None:
+        if self._shutdown:
+            return
+        self._shutdown = True
+        for _ in self._threads:
+            self._queue.put(None)
+        if wait:
+            for t in self._threads:
+                t.join(timeout=5.0)
+
+    def __enter__(self) -> "MeasurementExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+
+def batch_wall_seconds(costs: Sequence[float], workers: int) -> float:
+    """Deterministic parallel-makespan estimate for a measured batch: LPT
+    greedy assignment of per-measurement simulated costs onto `workers`
+    boards. Used by the scheduler to report wall-clock speedup separately
+    from the (worker-count-independent) device-seconds budget."""
+    if not costs:
+        return 0.0
+    loads = [0.0] * max(1, workers)
+    for c in sorted(costs, reverse=True):
+        loads[loads.index(min(loads))] += c
+    return max(loads)

@@ -356,3 +356,68 @@ class TestRegistrySatellites:
         survivor = self._reg(path)
         assert survivor.lookup("tpu_v5e", WL_A) is not None
         assert survivor.get("tpu_v5e", WL_A).knobs == CFG_A.knobs
+
+
+class TestFlushDeterminism:
+    """flush() must drain identically regardless of request arrival order:
+    devices sort lexically, tasks within a device sort by workload key
+    (task order feeds the tuner's shared RNG stream, so a drain-order
+    change would silently change every result)."""
+
+    WL_C = Workload("matmul", (128, 128, 128), name="c")
+
+    def _capture_hub(self, tmp_path, name):
+        hub = TuningHub(str(tmp_path / name), moses_cfg=TINY_CFG,
+                        trials_per_task=8)
+        calls = []
+
+        def fake_tune_batch(device, tasks):
+            calls.append((device, [wl.key() for wl in tasks]))
+
+            class _R:
+                total_measurements = 0
+                tasks = []
+            return _R()
+
+        hub._tune_batch = fake_tune_batch
+        return hub, calls
+
+    def test_drain_order_independent_of_request_order(self, tmp_path):
+        orders = [
+            [("tpu_v5e", WL_B), ("tpu_edge", WL_A), ("tpu_v5e", WL_A),
+             ("tpu_edge", self.WL_C), ("tpu_v5e", self.WL_C)],
+            [("tpu_v5e", self.WL_C), ("tpu_edge", self.WL_C),
+             ("tpu_v5e", WL_A), ("tpu_v5e", WL_B), ("tpu_edge", WL_A)],
+        ]
+        drains = []
+        for i, reqs in enumerate(orders):
+            hub, calls = self._capture_hub(tmp_path, f"h{i}")
+            for dev, wl in reqs:
+                assert hub.request(dev, wl)
+            hub.flush()
+            drains.append(calls)
+            assert hub.pending() == 0
+        assert drains[0] == drains[1]
+        # devices drain in sorted order; tasks sorted by key within each
+        assert [d for d, _ in drains[0]] == ["tpu_edge", "tpu_v5e"]
+        for _, keys in drains[0]:
+            assert keys == sorted(keys)
+
+    def test_single_device_flush_sorts_tasks(self, tmp_path):
+        hub, calls = self._capture_hub(tmp_path, "h")
+        for wl in (WL_B, self.WL_C, WL_A):
+            hub.request("tpu_lite", wl)
+        hub.flush("tpu_lite")
+        (dev, keys), = calls
+        assert dev == "tpu_lite" and keys == sorted(keys)
+
+    def test_pending_by_device_and_inflight_surface(self, tmp_path):
+        hub, _ = self._capture_hub(tmp_path, "h")
+        hub.request("tpu_v5e", WL_A)
+        hub.request("tpu_v5e", WL_B)
+        hub.request("tpu_edge", WL_A)
+        assert hub.pending_by_device() == {"tpu_edge": 1, "tpu_v5e": 2}
+        assert hub.pending() == 3
+        assert hub.inflight() == 0
+        hub.flush()
+        assert hub.pending_by_device() == {}
