@@ -1,0 +1,281 @@
+"""Continual refresh vs frozen params vs from-scratch on a drifting device.
+
+The Continual Learning subsystem's acceptance claims, measured on a
+simulated device whose hardware response DRIFTS mid-life (same peak
+compute/bandwidth, bent response surface — a firmware/compiler regression:
+tile sweet spot shrinks, in-VMEM accumulation stops paying, f32 stores get
+pricier). The hub saved a cost model for the pre-drift chip; the question
+is what to hand the tuner *after* the drift:
+
+  frozen     the stale pre-drift params, served forever (PR-3 behavior;
+             tenset-pretrain keeps the model frozen during search, so the
+             arm isolates exactly what the hub serves)
+  refreshed  the lifecycle-refreshed version: class-balanced replay mixed
+             with the newest (drifted) records, trained under the
+             lottery-mask-anchored L2, gated by the held-out guard
+  scratch    no transfer at all (ansor-random online baseline)
+
+Claims (`--check` exits non-zero if either fails):
+  1. SPEEDUP: the refreshed model reaches the frozen arm's per-task final
+     best latency (within a 5% tolerance — one measurement-noise sigma is
+     4%) with >= 1.2x fewer on-device measurements, summed over tasks.
+  2. GUARD: the accepted refresh never regresses pairwise rank accuracy
+     on the held-out slice of the newest records.
+The scratch arm's reach and finals are reported alongside (and beaten at
+the pinned default seed) but not gated — see the comment at the check.
+
+Outputs `artifacts/continual_curves.csv` (arm, task, measurements,
+best_latency) and `artifacts/continual_summary.csv`.
+
+    PYTHONPATH=src python -m benchmarks.continual_bench [--trials 48]
+        [--seed 1] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import os
+import shutil
+import sys
+import time
+from typing import Dict, List
+
+import jax
+
+from benchmarks.common import ART
+from repro.autotune import devices as dev_mod
+from repro.autotune.dataset import generate_records
+from repro.autotune.session import TuneSession
+from repro.autotune.space import Workload, default_config
+from repro.autotune.tuner import TuneResult
+from repro.configs.moses import DEFAULT as MCFG
+from repro.continual import LifecycleConfig, ModelLifecycle, ReplayConfig
+from repro.core.cost_model import resolve_cost_model
+from repro.hub.fingerprint import device_fingerprint
+from repro.hub.store import RecordStore
+
+DEVICE = "drift_sim"
+
+WORKLOADS = (
+    Workload("matmul", (512, 512, 256), name="cb_mm_square"),
+    Workload("matmul", (1024, 256, 256), name="cb_mm_tall"),
+    Workload("matmul", (256, 1024, 128), name="cb_mm_wide"),
+    Workload("matmul", (2048, 512, 512), name="cb_mm_big"),
+)
+
+# pre-drift: a tpu_v5e-class part. post-drift: same peak compute, but the
+# hardware-dependent response surface bends to an edge-like regime (VMEM
+# effectively shrinks, spills hurt, small tiles win, in-VMEM accumulation
+# stops paying) — exactly the axes Eq. 3 says must re-adapt. Rankings among
+# *random* programs barely move (the transferable structure — padding,
+# reuse — dominates there); rankings among the TOP candidates invert, which
+# is what serving actually pays for.
+_PRE = dataclasses.replace(dev_mod.DEVICES["tpu_v5e"], name=DEVICE,
+                           chip_seed=181)
+_POST = dataclasses.replace(
+    _PRE, mxu=64, vmem_bytes=2 * 2**20, spill_slope=4.0, hbm_bw=102e9,
+    min_burst=1024, sweet_block=64, block_sigma=1.1, prefer_k_inner=0,
+    k_inner_penalty=1.6, f32_out_penalty=1.4, unroll_sweet=1,
+    align_sensitivity=0.9)
+
+
+def _noiseless_latency(wl: Workload, cfg, device: str) -> float:
+    return dev_mod.execution_time(wl, cfg, dev_mod.DEVICES[device],
+                                  noisy=False)
+
+
+def task_curves(result: TuneResult) -> Dict[str, List[float]]:
+    """Per-task best-so-far (noiseless) latency after each measurement —
+    the paper's Fig. 5 convention: a task's reported latency is the
+    noiseless latency of its argmax-measured-throughput config."""
+    out: Dict[str, List[float]] = {}
+    for t in result.tasks:
+        best_thr = float("-inf")
+        lat = _noiseless_latency(t.workload, default_config(t.workload),
+                                 result.device)
+        traj: List[float] = []
+        for cfg, thr, _trial in (t.measured or []):
+            if thr > best_thr:
+                best_thr = thr
+                lat = _noiseless_latency(t.workload, cfg, result.device)
+            traj.append(lat)
+        out[t.workload.key()] = traj
+    return out
+
+
+def meas_to_reach(traj: List[float], target: float) -> float:
+    """First measurement count at which a task's best-so-far latency drops
+    to (or below) `target`; inf if it never does."""
+    for i, lat in enumerate(traj):
+        if lat <= target * (1 + 1e-9):
+            return float(i + 1)
+    return float("inf")
+
+
+def run(trials: int = 48, seed: int = 1, root: str = None,
+        fresh_per_task: int = 48, tolerance: float = 0.05
+        ) -> Dict[str, float]:
+    """Run the drifting-device experiment; returns the metrics dict (the
+    machine-readable BENCH payload — see benchmarks/run.py)."""
+    root = root or os.path.join(ART, "continual_bench")
+    if os.path.isdir(root):
+        shutil.rmtree(root)           # the experiment owns this store
+    tasks = list(WORKLOADS)
+    dev_mod.DEVICES[DEVICE] = _PRE
+    try:
+        # --- phase 1: the pre-drift life of the device --------------------
+        store = RecordStore(os.path.join(root, "store"))
+        generate_records(tasks, DEVICE, programs_per_task=64, seed=seed,
+                         store=store)
+        store.flush()
+        store.put_fingerprint(DEVICE, device_fingerprint(DEVICE))
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        params = model.init(jax.random.PRNGKey(seed))
+        v1, _ = model.train(params, store.records(DEVICE), epochs=10,
+                            seed=seed)
+        store.save_model_params(DEVICE, v1, "mlp",
+                                lineage={"trigger": "initial",
+                                         "records_seen": store.count(DEVICE)})
+        print(f"[continual] phase 1: {store.count(DEVICE)} pre-drift "
+              f"records, v1 saved")
+
+        # --- the drift event ----------------------------------------------
+        # the device keeps measuring after the drift (dataset-generation
+        # jobs, serving probes): the newest store records carry the new
+        # regime's labels — the signal the refresh trains on
+        dev_mod.DEVICES[DEVICE] = _POST
+        generate_records(tasks, DEVICE, programs_per_task=fresh_per_task,
+                         seed=seed + 7, store=store)
+        store.flush()
+
+        lc = ModelLifecycle(
+            store, model_name="mlp", moses_cfg=MCFG, seed=seed,
+            cfg=LifecycleConfig(window=fresh_per_task, min_fresh=8,
+                                refresh_epochs=30, anchor_strength=1e-2,
+                                retire_threshold=1.1,   # drift, not death
+                                replay=ReplayConfig(per_task=32,
+                                                    fresh_ratio=0.7)))
+        reports = lc.check(DEVICE)
+        for r in reports:
+            print(f"[continual] drift[{r.kind}]: value={r.value:.4f} "
+                  f"threshold={r.threshold} drifted={r.drifted} {r.detail}")
+        assert lc.decide(DEVICE, reports) == "refresh", (
+            "the drift event must be detected")
+        res = lc.maybe_refresh(DEVICE)
+        assert res is not None
+        print(f"[continual] refresh: accepted={res.accepted} "
+              f"reason={res.reason!r} trigger={res.trigger} "
+              f"holdout acc {res.holdout_accuracy_old:.3f} -> "
+              f"{res.holdout_accuracy_new:.3f} "
+              f"(mix={res.n_mix} rows, dist={res.param_distance:.3e})")
+        guard_ok = bool(
+            res.accepted
+            and (math.isnan(res.holdout_accuracy_old)
+                 or res.holdout_accuracy_new
+                 >= res.holdout_accuracy_old - lc.cfg.guard_eps))
+        v2 = store.load_model_params(DEVICE, model_name="mlp")
+
+        # --- the three arms, tuning the drifted device --------------------
+        def arm(name: str, pretrained, strategy: str) -> TuneResult:
+            # no per-arm salt: frozen and refreshed share one RNG stream
+            # (same device, same strategy), so the ONLY difference between
+            # them is which params the tuner warm-starts from
+            t0 = time.time()
+            session = TuneSession(moses_cfg=MCFG,
+                                  pretrained_params=pretrained, seed=seed,
+                                  trials_per_task=trials)
+            result = session.run(tasks, DEVICE, strategy)
+            print(f"[continual] arm {name:9s}: "
+                  f"{result.total_measurements} measurements, final "
+                  f"{sum(t.best_latency for t in result.tasks) * 1e3:.3f}ms"
+                  f"  [{time.time() - t0:.0f}s wall]")
+            return result
+
+        frozen = arm("frozen", v1, "tenset-pretrain")
+        refreshed = arm("refreshed", v2, "tenset-pretrain")
+        scratch = arm("scratch", None, "ansor-random")
+
+        curves = {"frozen": task_curves(frozen),
+                  "refreshed": task_curves(refreshed),
+                  "scratch": task_curves(scratch)}
+        # per-task targets: the frozen arm's final best, within one noise
+        # tolerance; reaches sum over tasks (inf if any task never reaches)
+        frozen_reach = refreshed_reach = scratch_reach = 0.0
+        for key, f_traj in curves["frozen"].items():
+            target = f_traj[-1] * (1 + tolerance)
+            fr = meas_to_reach(f_traj, target)
+            rr = meas_to_reach(curves["refreshed"][key], target)
+            sr = meas_to_reach(curves["scratch"][key], target)
+            print(f"[continual]   {key:24s} target={target * 1e6:8.2f}us "
+                  f"reach: frozen={fr:.0f} refreshed={rr:.0f} "
+                  f"scratch={sr:.0f}")
+            frozen_reach += fr
+            refreshed_reach += rr
+            scratch_reach += sr
+        speedup_frozen = frozen_reach / max(refreshed_reach, 1.0)
+        speedup_scratch = scratch_reach / max(refreshed_reach, 1.0)
+        finals = {name: sum(t[-1] for t in per.values())
+                  for name, per in curves.items()}
+
+        os.makedirs(ART, exist_ok=True)
+        with open(os.path.join(ART, "continual_curves.csv"), "w") as f:
+            f.write("arm,task,measurements,best_latency_s\n")
+            for name, per in curves.items():
+                for key, traj in per.items():
+                    for i, lat in enumerate(traj):
+                        f.write(f"{name},{key},{i + 1},{lat:.9f}\n")
+
+        # the --check gate is the acceptance criterion proper: >=1.2x fewer
+        # measurements than serving the frozen params, under the guard. The
+        # scratch arm is reported (and beaten at the pinned default seed)
+        # but not gated — an online learner's luck on a single task budget
+        # is too noisy to fail CI over.
+        speedup_ok = speedup_frozen >= 1.2
+        metrics = {
+            "refresh_speedup_vs_frozen": round(min(speedup_frozen, 99.0), 3),
+            "refresh_speedup_vs_scratch": round(min(speedup_scratch, 99.0),
+                                                3),
+            "frozen_final_latency_ms": round(finals["frozen"] * 1e3, 4),
+            "refreshed_final_latency_ms": round(finals["refreshed"] * 1e3,
+                                                4),
+            "scratch_final_latency_ms": round(finals["scratch"] * 1e3, 4),
+            "holdout_rank_accuracy_old": round(res.holdout_accuracy_old, 4),
+            "holdout_rank_accuracy_new": round(res.holdout_accuracy_new, 4),
+            "refresh_accepted": float(res.accepted),
+            "guard_ok": float(guard_ok),
+            "speedup_ok": float(speedup_ok),
+            "ok": float(speedup_ok and guard_ok),
+        }
+        with open(os.path.join(ART, "continual_summary.csv"), "w") as f:
+            f.write("metric,value\n")
+            for k, v in metrics.items():
+                f.write(f"{k},{v}\n")
+        print(f"[continual] SPEEDUP criterion (>=1.2x vs frozen): "
+              f"{'PASS' if speedup_ok else 'FAIL'} "
+              f"(vs frozen {speedup_frozen:.2f}x at {refreshed_reach:.0f} "
+              f"meas, vs scratch {speedup_scratch:.2f}x; finals "
+              f"{finals['refreshed'] * 1e3:.3f} vs scratch "
+              f"{finals['scratch'] * 1e3:.3f}ms)")
+        print(f"[continual] GUARD criterion (no held-out regression): "
+              f"{'PASS' if guard_ok else 'FAIL'}")
+        return metrics
+    finally:
+        dev_mod.DEVICES.pop(DEVICE, None)
+
+
+def main(trials: int = 48, seed: int = 1, check: bool = False) -> int:
+    metrics = run(trials=trials, seed=seed)
+    if check and not metrics["ok"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if an acceptance criterion fails")
+    args = ap.parse_args()
+    sys.exit(main(trials=args.trials, seed=args.seed, check=args.check))

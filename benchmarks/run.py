@@ -2,6 +2,7 @@
 """Benchmark orchestrator.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig4,table1,...] [--full]
+        [--timestamp 2026-07-30T12:00:00Z]
 
 Benchmarks (one per paper table/figure + system-level extras):
   fig4     end-to-end inference latency gains          (paper Fig. 4)
@@ -14,13 +15,38 @@ Benchmarks (one per paper table/figure + system-level extras):
            artifacts/dryrun from repro.launch.dryrun)
   sched    scheduled vs serial tuning: best-latency-vs-budget curves and
            the draft-then-verify reduction (benchmarks/sched_bench.py)
+  continual lifecycle-refreshed vs frozen vs from-scratch cost models on a
+           drifting device (benchmarks/continual_bench.py)
+
+Suites whose runner returns a metrics dict (sched, continual) additionally
+write a standardized ``BENCH_<suite>.json`` at the repo root — suite name,
+per-metric rows, and the PR timestamp passed via --timestamp — so the perf
+trajectory across PRs is machine-readable.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def write_bench_json(suite: str, metrics: dict, timestamp=None) -> str:
+    """Persist one suite's metrics as BENCH_<suite>.json at the repo root:
+    {suite, timestamp, metrics: [{metric, value}, ...]}."""
+    payload = {"suite": suite, "timestamp": timestamp,
+               "metrics": [{"metric": k, "value": v}
+                           for k, v in sorted(metrics.items())]}
+    path = os.path.join(REPO_ROOT, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return path
 
 
 def main() -> None:
@@ -29,12 +55,15 @@ def main() -> None:
                     help="comma-separated subset of benchmarks")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale trial budgets (slow)")
+    ap.add_argument("--timestamp", default=None,
+                    help="PR timestamp recorded in BENCH_<suite>.json "
+                         "(the perf-trajectory key; e.g. git commit date)")
     args = ap.parse_args()
 
-    from benchmarks import (crosstask, dataset_stats, fig4_inference_gain,
-                            fig5_search_efficiency, fig6_ratio_ablation,
-                            kernels_bench, roofline_table, sched_bench,
-                            table1_cmat)
+    from benchmarks import (continual_bench, crosstask, dataset_stats,
+                            fig4_inference_gain, fig5_search_efficiency,
+                            fig6_ratio_ablation, kernels_bench,
+                            roofline_table, sched_bench, table1_cmat)
     from benchmarks.common import LARGE_TRIALS, SMALL_TRIALS
 
     small = 200 if args.full else SMALL_TRIALS
@@ -62,7 +91,8 @@ def main() -> None:
         "dataset": lambda: dataset_stats.main(24 if not args.full else 96),
         "crosstask": lambda: crosstask.main(trials=small),
         "roofline": roofline_table.main,
-        "sched": lambda: sched_bench.main(trials=small),
+        "sched": lambda: sched_bench.run(trials=small),
+        "continual": lambda: continual_bench.run(),
     }
     picked = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")
@@ -71,7 +101,9 @@ def main() -> None:
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
-            benches[name]()
+            out = benches[name]()
+            if isinstance(out, dict):
+                write_bench_json(name, out, timestamp=args.timestamp)
         except Exception as e:
             failures.append(name)
             traceback.print_exc()

@@ -61,8 +61,12 @@ def serial_curve(results: List[TuneResult]) -> List[Tuple[float, float]]:
     best: Dict[Tuple[str, str], float] = {}
     for r in results:
         for t in r.tasks:
-            best[(r.device, t.workload.key())] = _noiseless_latency(
-                t.workload, default_config(t.workload), r.device)
+            # weight by occurrence count, matching CampaignResult.curve()'s
+            # TraceEntry convention — the two curves must be comparable
+            # point for point even for count>1 workloads
+            best[(r.device, t.workload.key())] = t.workload.count * \
+                _noiseless_latency(t.workload, default_config(t.workload),
+                                   r.device)
     points = [(0.0, sum(best.values()))]
     spent = 0.0
     for r in results:
@@ -74,7 +78,8 @@ def serial_curve(results: List[TuneResult]) -> List[Tuple[float, float]]:
                 if thr > best_thr:
                     best_thr = thr
                     best[(r.device, t.workload.key())] = \
-                        _noiseless_latency(t.workload, cfg, r.device)
+                        t.workload.count * _noiseless_latency(t.workload,
+                                                              cfg, r.device)
                     points.append((spent, sum(best.values())))
     return points
 
@@ -89,8 +94,10 @@ def budget_to_reach(curve: List[Tuple[float, float]],
     return float("inf")
 
 
-def main(trials: int = 48, strategy: str = "tenset-finetune",
-         tolerance: float = 0.02, check: bool = False, seed: int = 1) -> int:
+def run(trials: int = 48, strategy: str = "tenset-finetune",
+        tolerance: float = 0.02, seed: int = 1) -> Dict[str, float]:
+    """Run the campaign comparison; returns the metrics dict (the
+    machine-readable BENCH payload — see benchmarks/run.py)."""
     jobs = [(d, list(WORKLOADS)) for d in DEVICES]
     n_tasks = len(DEVICES) * len(WORKLOADS)
     # the recommended campaign shape: 8-trial grants give the allocator
@@ -120,8 +127,8 @@ def main(trials: int = 48, strategy: str = "tenset-finetune",
     campaign = grad_session.run_many(
         jobs, strategy=strategy, scheduler="gradient", sched=sched,
         total_trials=trials * n_tasks, return_campaign=True)
-    grad_final = sum(t.best_latency for r in campaign.results
-                     for t in r.tasks)
+    grad_final = sum(t.best_latency * t.workload.count
+                     for r in campaign.results for t in r.tasks)
     # curve() runs on measurement-only seconds and is closed with the post-
     # finish() point (prediction-only confirmations land there, exactly as
     # the serial replay includes its trial-97 confirmations)
@@ -142,7 +149,8 @@ def main(trials: int = 48, strategy: str = "tenset-finetune",
         jobs, strategy=strategy, scheduler="gradient", sched=sched,
         total_trials=trials * n_tasks, speculative=True,
         return_campaign=True)
-    spec_final = sum(t.best_latency for r in spec.results for t in r.tasks)
+    spec_final = sum(t.best_latency * t.workload.count
+                     for r in spec.results for t in r.tasks)
     spec_curve = spec.curve()
     st = spec.spec_stats
     quality_gap = spec_final / max(grad_final, 1e-12) - 1.0
@@ -177,7 +185,24 @@ def main(trials: int = 48, strategy: str = "tenset-finetune",
     print(f"[sched] DRAFT criterion (>=2x, <= {tolerance * 100:.0f}% gap): "
           f"{'PASS' if draft_ok else 'FAIL'} "
           f"({st.full_model_reduction:.1f}x, {quality_gap * 100:+.1f}%)")
-    if check and not (budget_ok and draft_ok):
+    return {
+        "budget_fraction_to_match_serial": round(frac, 4),
+        "full_model_reduction": round(st.full_model_reduction, 3),
+        "draft_quality_gap": round(quality_gap, 5),
+        "draft_acceptance": round(st.acceptance, 4),
+        "serial_final_latency_ms": round(serial_final * 1e3, 4),
+        "gradient_final_latency_ms": round(grad_final * 1e3, 4),
+        "budget_ok": float(budget_ok),
+        "draft_ok": float(draft_ok),
+        "ok": float(budget_ok and draft_ok),
+    }
+
+
+def main(trials: int = 48, strategy: str = "tenset-finetune",
+         tolerance: float = 0.02, check: bool = False, seed: int = 1) -> int:
+    metrics = run(trials=trials, strategy=strategy, tolerance=tolerance,
+                  seed=seed)
+    if check and not metrics["ok"]:
         return 1
     return 0
 

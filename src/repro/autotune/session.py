@@ -222,6 +222,32 @@ class TuneSession:
                 self.store.put_result(result)
         return campaign if return_campaign else campaign.results
 
+    def refresh_params(self, device: str, params: PyTree, records: Records,
+                       anchor: Optional[PyTree] = None,
+                       weights: Optional[PyTree] = None,
+                       epochs: int = 8, lr: Optional[float] = None,
+                       salt: str = "") -> Tuple[PyTree, List[float]]:
+        """Continual-refresh training job: (re)fit `params` on `records`
+        with the lottery-mask-anchored L2 pull toward `anchor` (see
+        `repro.continual.regularize.anchored_train`; `anchor`/`weights`
+        None means plain training — the cold-start path).
+
+        This is how `ModelLifecycle` refreshes ride the session machinery:
+        the job uses the session's resolved cost model (shared jit traces
+        with every tuning job) and an order-independent derived seed, so a
+        background refresh is as reproducible as any `run()` job. Returns
+        (new params, per-epoch losses); nothing is persisted here — the
+        lifecycle manager owns versioning and the no-regression guard."""
+        from repro.continual.regularize import anchored_train
+        from repro.core.cost_model import resolve_cost_model
+        model = self.resolved_cost_model()
+        if model is None:
+            model = resolve_cost_model(None, self.moses_cfg.cost_model)
+        seed = self.job_seed(device, "continual-refresh", salt)
+        return anchored_train(model, params, records, anchor=anchor,
+                              weights=weights, epochs=epochs, lr=lr,
+                              seed=seed)
+
     def run_matrix(self, task_sets: Dict[str, Sequence[Workload]],
                    devices: Dict[str, str],
                    strategies: Sequence[StrategySpec] = STRATEGIES,

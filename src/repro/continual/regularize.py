@@ -1,0 +1,124 @@
+"""Drift-aware continual update: lottery-mask-anchored L2 (EWC-lite).
+
+EWC penalizes parameter movement weighted by Fisher importance; Moses
+already computes an importance structure every adaptation phase — the
+lottery mask (Eq. 5) separating transferable (hardware-independent) from
+domain-variant parameters. The continual refresh reuses that mask as the
+importance prior:
+
+  * transferable parameters are *anchored* to the serving version with an
+    L2 pull — they encode the cross-device winning ticket the hub transfers,
+    and letting them drift would silently invalidate every sibling device's
+    warm start;
+  * variant parameters fit the new data freely — they are exactly the
+    hardware-response weights that distribution drift invalidates.
+
+So the refreshed model stays close to the transferable ticket while its
+hardware-facing capacity re-fits the newest records. The anchor term is
+0.5 * sum(weights * (w - w_anchor)^2) added to the ranking loss; `weights`
+is `strength * mask` from one gradient evaluation at the anchor point.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lottery
+from repro.core.cost_model import (AdamState, CostModel, Records, adam_init,
+                                   adam_update, bucket_size, model_loss,
+                                   pad_rows)
+
+PyTree = Any
+
+
+def _full_batch(records: Records, pad: bool = True) -> dict:
+    """The whole record set as one (optionally bucket-padded) batch."""
+    x, y, g = records.x, records.y, records.g
+    m = np.ones(len(x), np.float32)
+    if pad:
+        b = bucket_size(len(x))
+        x, y, m = pad_rows(x, b), pad_rows(y, b), pad_rows(m, b)
+        g = np.concatenate([g, np.full(b - len(records), -1, g.dtype)])
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y), "g": jnp.asarray(g),
+            "m": jnp.asarray(m)}
+
+
+def anchor_weights(model: CostModel, params: PyTree, records: Records, *,
+                   ratio: float = 0.5, strength: float = 1e-2,
+                   seed: int = 0) -> PyTree:
+    """The EWC-lite importance prior: `strength * lottery_mask`.
+
+    One gradient evaluation of the ranking loss at `params` over the whole
+    record set -> xi = |w * grad_w| (Eq. 5) -> top-`ratio` mask. Parameters
+    the ticket marks transferable get anchor weight `strength`; the rest 0.
+    """
+    batch = _full_batch(records)
+    rng = jax.random.PRNGKey(seed)
+    # same objective anchored_train optimizes — a mask computed from a
+    # different loss would misidentify which parameters are transferable
+    grads = jax.grad(model_loss)(params, batch, rng, model.cfg.loss,
+                                 model.cfg.rank_pairs_per_batch,
+                                 model._static_forward())
+    mask = lottery.transferable_mask(params, grads, ratio=ratio,
+                                     use_ratio=True)
+    return jax.tree.map(lambda m: strength * m, mask)
+
+
+@partial(jax.jit, static_argnames=("loss_kind", "n_pairs", "forward"))
+def _anchored_loss_and_grad(params, anchor, weights, batch, rng, loss_kind,
+                            n_pairs, forward=None):
+    def total(p):
+        base = model_loss(p, batch, rng, loss_kind, n_pairs, forward)
+        pen = sum(0.5 * jnp.sum(w * jnp.square(x - a))
+                  for x, a, w in zip(jax.tree.leaves(p),
+                                     jax.tree.leaves(anchor),
+                                     jax.tree.leaves(weights)))
+        return base + pen, base
+
+    (loss, base), grads = jax.value_and_grad(total, has_aux=True)(params)
+    return loss, base, grads
+
+
+def anchored_train(model: CostModel, params: PyTree, records: Records, *,
+                   anchor: Optional[PyTree] = None,
+                   weights: Optional[PyTree] = None,
+                   epochs: int = 8, lr: Optional[float] = None,
+                   seed: int = 0, pad: bool = True
+                   ) -> Tuple[PyTree, List[float]]:
+    """Adam + ranking loss + anchored-L2 over `records`.
+
+    `anchor` defaults to the starting `params` (the serving version being
+    refreshed); `weights` defaults to zero everywhere, i.e. plain training —
+    pass `anchor_weights(...)` output for the masked EWC-lite pull. Returns
+    (new params, per-epoch mean losses). Bucket-padded batches keep the
+    jitted step at a handful of compiled shapes (same discipline as
+    `train_cost_model`)."""
+    cfg = model.cfg
+    if anchor is None:
+        anchor = params
+    if weights is None:
+        weights = jax.tree.map(jnp.zeros_like, params)
+    anchor = jax.tree.map(jnp.asarray, anchor)
+    params = model.clone_params(params)
+    forward = model._static_forward()
+    rng_np = np.random.RandomState(seed)
+    key = jax.random.PRNGKey(seed)
+    opt: AdamState = adam_init(params)
+    losses: List[float] = []
+    for _ in range(epochs):
+        ep_loss, nb = 0.0, 0
+        for batch in records.batches(cfg.batch_size, rng_np, pad=pad):
+            key, sub = jax.random.split(key)
+            loss, _base, grads = _anchored_loss_and_grad(
+                params, anchor, weights, batch, sub, cfg.loss,
+                cfg.rank_pairs_per_batch, forward)
+            params, opt = adam_update(grads, opt, params,
+                                      lr=lr if lr is not None else cfg.lr)
+            ep_loss += float(loss)
+            nb += 1
+        losses.append(ep_loss / max(nb, 1))
+    return params, losses

@@ -14,13 +14,20 @@ neighbor to learn from.
 In-flight dedup: a (device, task) that is already pending or being tuned is
 never queued twice; concurrent `get_config` calls for it block on the
 serving lock and return the registry hit once the first job lands.
+
+Continual learning (`refresh="sync"|"auto"`): after every tuning job lands
+new records, the hub's `ModelLifecycle` checks the device for drift and
+refreshes (or retires) its serving cost model — replay-mixed, mask-anchored,
+guarded against rank-accuracy regression (see `repro.continual`). Serving
+always loads the newest non-retired version from the store's lineage.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import sys
 import threading
-from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 
@@ -43,6 +50,8 @@ class HubStats:
     jobs: int = 0            # batched TuneSession jobs run
     dedup_skips: int = 0     # requests already pending/in-flight
     measurements: int = 0    # total new on-device measurements
+    refreshes: int = 0       # accepted continual-refresh versions
+    refresh_rejects: int = 0  # refresh attempts the guard (or floor) refused
 
 
 @dataclasses.dataclass
@@ -76,7 +85,10 @@ class TuningHub:
                  pretrain_epochs: int = 6,
                  seed: int = 0,
                  scheduler: str = "serial",
-                 speculative: bool = False):
+                 speculative: bool = False,
+                 refresh: str = "off",
+                 lifecycle=None,
+                 lifecycle_cfg=None):
         self.root = root
         self.moses_cfg = moses_cfg
         self.store = store if store is not None else RecordStore(
@@ -93,12 +105,22 @@ class TuningHub:
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.scheduler = scheduler
         self.speculative = speculative
+        if refresh not in ("off", "sync", "auto"):
+            raise ValueError(f"unknown refresh mode {refresh!r}; expected "
+                             "'off', 'sync', or 'auto'")
+        self.refresh = refresh
+        self._lifecycle = lifecycle
+        self._lifecycle_cfg = lifecycle_cfg
         self.stats = HubStats()
         self._lock = threading.RLock()          # hub state (queues, stats)
         self._dev_locks: Dict[str, threading.Lock] = {}  # one job per device
         self._pending: Dict[str, Dict[str, Workload]] = {}
         self._inflight: Set[Tuple[str, str]] = set()
         self._selections: Dict[str, SourceSelection] = {}
+        self._refresh_threads: List[threading.Thread] = []
+        # device -> fingerprint probed THIS session (safe to hand the drift
+        # detector as "current" — persisted vectors may be stale baselines)
+        self._fresh_fps: Dict[str, Any] = {}
 
     # --- queueing ---------------------------------------------------------
     def request(self, device: str, wl: Workload) -> bool:
@@ -219,6 +241,8 @@ class TuningHub:
         if fp is None:
             fp = device_fingerprint(device)
             self.store.put_fingerprint(device, fp)
+            with self._lock:
+                self._fresh_fps[device] = fp
         sel = select_sources(self.store, device, top_k=self.top_k_sources,
                              model_name=self.cost_model_name,
                              target_fingerprint=fp, seed=self.seed)
@@ -232,10 +256,94 @@ class TuningHub:
             sel.pretrained_params = params
             sel.params_device = sel.best_source
             # keyed by the source device: its corpus trained these params
-            self.store.save_model_params(sel.best_source, params,
-                                         self.cost_model_name)
+            self.store.save_model_params(
+                sel.best_source, params, self.cost_model_name,
+                lineage={"trigger": "pretrain",
+                         "records_seen": self.store.count(sel.best_source)})
         self._selections[device] = sel
         return sel
+
+    # --- continual learning ----------------------------------------------
+    @property
+    def lifecycle(self):
+        """The `ModelLifecycle` manager over this hub's store (lazy; always
+        available for inspection — `--lineage`, `--stats` — even when
+        auto-refresh is off). Refresh jobs run through a TuneSession wired
+        to the hub's config, seed, and cost-model family, so a background
+        refresh is as reproducible as a serving job."""
+        with self._lock:
+            if self._lifecycle is None:
+                from repro.autotune.session import TuneSession
+                from repro.continual.lifecycle import ModelLifecycle
+                self._lifecycle = ModelLifecycle(
+                    self.store, model_name=self.cost_model_name,
+                    moses_cfg=self.moses_cfg, cfg=self._lifecycle_cfg,
+                    seed=self.seed,
+                    session=TuneSession(moses_cfg=self.moses_cfg,
+                                        seed=self.seed,
+                                        cost_model=self.cost_model_name))
+            return self._lifecycle
+
+    def _run_refresh(self, device: str) -> None:
+        try:
+            lc = self.lifecycle
+            if (lc.serving_params(device) is None
+                    and self.store.count(device) > 0):
+                # the device just gained its first corpus but has no serving
+                # model of its own (PR-3 keyed pretrained params by the
+                # SOURCE): bootstrap its lineage so the next similar device
+                # warm-starts from params trained on this exact chip
+                result = lc.refresh(device, trigger="post-job")
+            else:
+                # reuse a probe vector measured this session (the miss path
+                # fingerprints new devices) instead of re-probing per job
+                with self._lock:
+                    fp = self._fresh_fps.pop(device, None)
+                result = lc.maybe_refresh(device, current_fingerprint=fp)
+        except Exception as e:  # noqa: BLE001 — a daemon thread must not
+            # die silently: surface the failure in the stats the smoke and
+            # --stats read, not just a stderr traceback
+            with self._lock:
+                self.stats.refresh_rejects += 1
+            print(f"[hub] continual refresh({device}) failed: {e!r}",
+                  file=sys.stderr)
+            return
+        with self._lock:
+            if result is None:
+                return
+            if result.accepted:
+                self.stats.refreshes += 1
+                # selections that warm-started from this device's params now
+                # point at a superseded version; recompute on next miss
+                for target in [t for t, sel in self._selections.items()
+                               if sel.params_device == device]:
+                    del self._selections[target]
+            else:
+                self.stats.refresh_rejects += 1
+
+    def _schedule_refresh(self, device: str) -> None:
+        """Post-job continual-learning hook: check drift on the device that
+        just gained records and refresh/retire its serving model. "sync"
+        runs inline (deterministic — the CI smoke), "auto" as a background
+        job so serving latency never pays for model maintenance."""
+        if self.refresh == "sync":
+            self._run_refresh(device)
+            return
+        t = threading.Thread(target=self._run_refresh, args=(device,),
+                             name=f"hub-refresh-{device}", daemon=True)
+        with self._lock:
+            self._refresh_threads = [x for x in self._refresh_threads
+                                     if x.is_alive()]
+            self._refresh_threads.append(t)
+        t.start()
+
+    def join_refreshes(self, timeout: Optional[float] = None) -> None:
+        """Block until in-flight background refreshes finish (tests, smoke,
+        orderly shutdown)."""
+        with self._lock:
+            threads = list(self._refresh_threads)
+        for t in threads:
+            t.join(timeout)
 
     def _tune_batch(self, device: str, tasks: Sequence[Workload]):
         sel = self._selection_for(device)
@@ -267,4 +375,6 @@ class TuningHub:
         self.stats.measurements += result.total_measurements
         self.registry.save()
         self.store.flush()
+        if self.refresh != "off":
+            self._schedule_refresh(device)
         return result

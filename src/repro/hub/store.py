@@ -307,30 +307,199 @@ class RecordStore:
     def get_fingerprint(self, device: str) -> Optional[np.ndarray]:
         return self.fingerprints().get(device)
 
-    # --- pretrained cost-model params -------------------------------------
+    # --- maintenance ------------------------------------------------------
+    def compact(self, device: Optional[str] = None) -> int:
+        """Rewrite persisted shards dropping duplicate (task, knobs, trial)
+        rows (first occurrence wins) and any torn trailing line; returns the
+        number of rows dropped.
+
+        `put()` dedups within one store instance, but two processes
+        appending to the same root, or shards merged with `cat`, can land
+        duplicates on disk. Buffered records flush first so the rewrite
+        sees everything; each rewritten shard goes through the same
+        temp-file + `os.replace` discipline as `flush()`, so a crash
+        mid-compact never corrupts a shard (torn-line-survives is
+        regression-tested)."""
+        with self._lock:
+            self.flush()
+            dropped = 0
+            devices = [device] if device is not None else self.devices()
+            for dev in devices:
+                d = self._records_dir(dev)
+                if not os.path.isdir(d):
+                    continue
+                for name in sorted(os.listdir(d)):
+                    if not name.endswith(".jsonl"):
+                        continue
+                    path = os.path.join(d, name)
+                    with open(path) as f:
+                        n_lines = sum(1 for ln in f if ln.strip())
+                    recs = _load_shard_file(path)
+                    seen, kept = set(), []
+                    for rec in recs:
+                        dk = _dedup_key(rec)
+                        if dk in seen:
+                            continue
+                        seen.add(dk)
+                        kept.append(rec)
+                    if len(kept) == n_lines:
+                        continue
+                    tmp = path + ".tmp"
+                    with open(tmp, "w") as f:
+                        for rec in kept:
+                            f.write(json.dumps(rec, sort_keys=True) + "\n")
+                    os.replace(tmp, path)
+                    dropped += n_lines - len(kept)
+                    # rewritten on disk: drop stale cache + index entries
+                    self._shard_cache.pop(path, None)
+                    task_key = next((k for (dv, k) in self._index
+                                     if dv == dev and
+                                     self._shard_path(dv, k) == path), None)
+                    if task_key is not None:
+                        self._index.pop((dev, task_key), None)
+            return dropped
+
+    # --- versioned cost-model params + lineage ----------------------------
+    # Layout:
+    #   params/<device>.npz            legacy single-slot file (read-only
+    #                                  fallback; pre-lifecycle stores)
+    #   params/<device>/v0001.npz      one file per saved version
+    #   params/<device>/lineage.json   ordered lineage records
+    #
+    # Every save appends a lineage entry: version, parent version,
+    # records-seen watermark, what triggered the save, and status
+    # ("active" | "retired"). Loads walk the lineage newest-first and skip
+    # retired or family-mismatched versions, so "the serving model" is
+    # always the newest non-retired version of the right family.
+
     def _params_path(self, device: str) -> str:
         return os.path.join(self.root, "params", f"{device}.npz")
 
-    def save_model_params(self, device: str, params, model_name: str) -> str:
-        """Persist cost-model params keyed by the device whose corpus trained
-        them, tagged with the model family so a loader can refuse a
-        mismatch."""
-        path = self._params_path(device)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        save_params(path, params,
-                    meta={"model": model_name, "schema": SCHEMA_VERSION})
-        return path
+    def _params_dir(self, device: str) -> str:
+        return os.path.join(self.root, "params", device)
+
+    def _lineage_path(self, device: str) -> str:
+        return os.path.join(self._params_dir(device), "lineage.json")
+
+    def model_lineage(self, device: str) -> List[Dict[str, Any]]:
+        """The device's ordered lineage records (oldest first); [] when no
+        versioned params exist. A legacy flat-file save appears as a
+        synthetic version-0 entry so callers see one consistent history."""
+        path = self._lineage_path(device)
+        entries: List[Dict[str, Any]] = []
+        if os.path.exists(path):
+            with open(path) as f:
+                data = json.load(f)
+            if data.get("schema") != SCHEMA_VERSION:
+                raise StoreSchemaError(
+                    f"{path} has schema {data.get('schema')!r}")
+            entries = list(data.get("versions", []))
+        elif os.path.exists(self._params_path(device)):
+            _, meta = load_params(self._params_path(device))
+            entries = [{"version": 0, "parent": None,
+                        "model": meta.get("model"), "trigger": "legacy",
+                        "status": "active", "records_seen": None}]
+        return entries
+
+    def _write_lineage(self, device: str,
+                       entries: List[Dict[str, Any]]) -> None:
+        os.makedirs(self._params_dir(device), exist_ok=True)
+        path = self._lineage_path(device)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"schema": SCHEMA_VERSION, "versions": entries}, f,
+                      indent=1, sort_keys=True)
+        os.replace(tmp, path)
+
+    def latest_model_version(self, device: str,
+                             model_name: Optional[str] = None
+                             ) -> Optional[int]:
+        """Newest non-retired version number (of `model_name` if given)."""
+        for e in reversed(self.model_lineage(device)):
+            if e.get("status") == "retired":
+                continue
+            if model_name is not None and e.get("model") not in (
+                    None, model_name):
+                continue
+            return int(e["version"])
+        return None
+
+    def save_model_params(self, device: str, params, model_name: str,
+                          lineage: Optional[Dict[str, Any]] = None) -> str:
+        """Persist cost-model params as a NEW version in the device's
+        lineage, tagged with the model family so a loader can refuse a
+        mismatch. `lineage` merges extra metadata into the entry (the
+        lifecycle manager records records-seen watermark, drift trigger,
+        rank-accuracy and parameter distance here). Returns the .npz path.
+        """
+        with self._lock:
+            entries = self.model_lineage(device)
+            version = (max(int(e["version"]) for e in entries) + 1
+                       if entries else 1)
+            # the parent is the version this one supersedes — necessarily
+            # of the same family (a different architecture's params are not
+            # an ancestor, they are a sibling lineage)
+            parent = self.latest_model_version(device,
+                                               model_name=model_name)
+            fname = f"v{version:04d}.npz"
+            path = os.path.join(self._params_dir(device), fname)
+            os.makedirs(self._params_dir(device), exist_ok=True)
+            save_params(path, params,
+                        meta={"model": model_name, "schema": SCHEMA_VERSION,
+                              "version": version})
+            entry = {"version": version, "parent": parent,
+                     "model": model_name, "path": fname,
+                     "trigger": "save", "status": "active",
+                     "records_seen": None}
+            entry.update(lineage or {})
+            entries.append(entry)
+            self._write_lineage(device, entries)
+            return path
 
     def load_model_params(self, device: str,
-                          model_name: Optional[str] = None):
-        """Load persisted params for `device`, or None. When `model_name` is
-        given, params saved for a different model family are treated as
-        absent (architectures differ; loading them would crash downstream)."""
-        path = self._params_path(device)
-        if not os.path.exists(path):
-            return None
-        params, meta = load_params(path)
-        if model_name is not None and meta.get("model") not in (None,
-                                                                model_name):
-            return None
-        return params
+                          model_name: Optional[str] = None,
+                          version: Optional[int] = None):
+        """Load the newest non-retired persisted params for `device`, or
+        None. When `model_name` is given, versions saved for a different
+        model family are skipped (architectures differ; loading them would
+        crash downstream). `version` pins an exact lineage version (even a
+        retired one — post-mortems need to load what *was* serving)."""
+        entries = self.model_lineage(device)
+        for e in reversed(entries):
+            if version is not None and int(e["version"]) != version:
+                continue
+            if version is None and e.get("status") == "retired":
+                continue
+            if model_name is not None and e.get("model") not in (
+                    None, model_name):
+                if version is not None:
+                    return None
+                continue
+            if int(e["version"]) == 0 or "path" not in e:
+                path = self._params_path(device)   # legacy flat file
+            else:
+                path = os.path.join(self._params_dir(device), e["path"])
+            if not os.path.exists(path):
+                continue
+            params, _meta = load_params(path)
+            return params
+        return None
+
+    def retire_model(self, device: str,
+                     version: Optional[int] = None) -> bool:
+        """Mark a lineage version (newest active by default) retired so
+        loads skip it; returns False when there was nothing to retire."""
+        with self._lock:
+            entries = self.model_lineage(device)
+            target = (version if version is not None
+                      else self.latest_model_version(device))
+            if target is None:
+                return False
+            hit = False
+            for e in entries:
+                if int(e["version"]) == int(target):
+                    e["status"] = "retired"
+                    hit = True
+            if hit:
+                self._write_lineage(device, entries)
+            return hit

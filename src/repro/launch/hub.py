@@ -1,9 +1,11 @@
 """Transfer-hub launcher: serve, inspect, and smoke-test the TuningHub.
 
-    PYTHONPATH=src python -m repro.launch.hub --smoke [--root DIR]
+    PYTHONPATH=src python -m repro.launch.hub --smoke [--refresh] [--root DIR]
     PYTHONPATH=src python -m repro.launch.hub --stats [--root DIR]
+    PYTHONPATH=src python -m repro.launch.hub --lineage [--device DEV]
+    PYTHONPATH=src python -m repro.launch.hub --compact
     PYTHONPATH=src python -m repro.launch.hub --device tpu_lite \
-        --dnn squeezenet --trials 32 [--bootstrap tpu_v5e,tpu_edge]
+        --dnn squeezenet --trials 32 [--bootstrap tpu_v5e,tpu_edge] [--refresh]
 
 --smoke is the CI leg: a tiny-budget end-to-end pass — bootstrap a two-device
 store, fingerprint a device *absent* from it, warm-start Moses from the
@@ -11,11 +13,17 @@ auto-selected nearest source, then prove the second `get_config` for the same
 (device, workload) is a registry hit with zero new measurements. It tolerates
 a warm (cached) hub root: with everything already tuned, the first call is
 simply a hit too. Exits non-zero if any serving invariant fails.
+
+--smoke --refresh additionally exercises the continual-learning path on the
+same tiny store: background auto-refresh after the serving job, then a
+forced lifecycle refresh whose accepted version must land in the store's
+lineage (and whose held-out rank-accuracy guard must hold).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import sys
 import time
 
@@ -35,12 +43,21 @@ def _smoke_tasks():
             Workload("matmul", (512, 256, 128), name="smoke_b")]
 
 
-def run_smoke(root: str) -> int:
+def _smoke_lifecycle_cfg():
+    from repro.continual import LifecycleConfig, ReplayConfig
+    return LifecycleConfig(window=8, min_fresh=4, refresh_epochs=3,
+                           replay=ReplayConfig(per_task=16))
+
+
+def run_smoke(root: str, refresh: bool = False) -> int:
     from repro.hub import TuningHub, bootstrap_store
 
     t0 = time.time()
     hub = TuningHub(root, moses_cfg=_smoke_cfg(), trials_per_task=16,
-                    pretrain_epochs=4)
+                    pretrain_epochs=4,
+                    refresh="auto" if refresh else "off",
+                    lifecycle_cfg=_smoke_lifecycle_cfg() if refresh
+                    else None)
     boot = bootstrap_store(hub.store, ("tpu_v5e", "tpu_edge"),
                            _smoke_tasks(), programs_per_task=16)
     print(f"[hub-smoke] store at {hub.store.root}: "
@@ -68,33 +85,129 @@ def run_smoke(root: str) -> int:
     assert hub.store.get_fingerprint(target) is not None, (
         "target fingerprint was not persisted")
 
+    if refresh:
+        rc = run_refresh_smoke(hub, target)
+        if rc:
+            return rc
     print(f"[hub-smoke] OK in {time.time() - t0:.1f}s — stats: {hub.stats}")
     return 0
 
 
-def print_stats(root: str, hub=None) -> int:
-    """Store statistics + the serving queue (depth and per-device pending).
+def run_refresh_smoke(hub, target: str) -> int:
+    """The continual-learning leg of the smoke: background auto-refresh has
+    run (or been skipped as 'keep' — both are valid on an undrifted store),
+    and a forced refresh must version the serving model under the guard."""
+    hub.join_refreshes()
+    lc = hub.lifecycle
+    print(f"[hub-smoke] post-serve refresh stats: "
+          f"refreshes={hub.stats.refreshes} "
+          f"rejects={hub.stats.refresh_rejects}")
+    # the device measured most recently has fresh records: force one
+    # refresh so both the cold (initial) and warm (anchored) paths are
+    # exercised regardless of cache warmth
+    dev = target if hub.store.count(target) > 0 else "tpu_v5e"
+    before = hub.store.latest_model_version(dev)
+    res = lc.refresh(dev, trigger="smoke", force=True)
+    print(f"[hub-smoke] forced refresh({dev}): accepted={res.accepted} "
+          f"reason={res.reason!r} version={res.version} "
+          f"acc {res.holdout_accuracy_old:.3f}->"
+          f"{res.holdout_accuracy_new:.3f}")
+    if res.accepted:
+        assert res.version is not None and res.version != before, (
+            "accepted refresh must create a new lineage version")
+        assert hub.store.latest_model_version(dev) == res.version
+        lineage = hub.store.model_lineage(dev)
+        assert lineage and lineage[-1]["trigger"] in ("smoke", "initial")
+        assert hub.store.load_model_params(
+            dev, model_name=hub.cost_model_name) is not None, (
+            "newest version must be loadable for serving")
+    else:
+        assert "regress" in res.reason or "refreshing" in res.reason, (
+            f"forced refresh refused for an unexpected reason: {res.reason}")
+    # the guard invariant: an accepted refresh never regresses held-out
+    # rank accuracy beyond the configured tolerance
+    if (res.accepted and not math.isnan(res.holdout_accuracy_new)
+            and not math.isnan(res.holdout_accuracy_old)):
+        assert (res.holdout_accuracy_new
+                >= res.holdout_accuracy_old - lc.cfg.guard_eps), (
+            "guard violated: accepted refresh regressed rank accuracy")
+    status = lc.status(dev)
+    assert status in ("fresh", "stale"), f"unexpected lifecycle {status=}"
+    print(f"[hub-smoke] lifecycle({dev}) status={status} "
+          f"lineage={[e['version'] for e in hub.store.model_lineage(dev)]}")
+    return 0
+
+
+def print_stats(root: str, hub=None, drift: bool = True) -> int:
+    """Store statistics + the serving queue + per-device drift columns.
 
     `hub` defaults to a fresh `TuningHub` over `root` — a new process has an
     empty in-memory queue, but long-lived callers (tests, embedding servers)
-    pass their live hub to see real depths."""
+    pass their live hub to see real depths. `drift=True` adds the
+    continual-learning columns: fingerprint shift vs the persisted vector,
+    rank accuracy of the serving model on the newest records, lineage
+    version, and lifecycle status (each fingerprint shift re-runs the
+    16-probe suite — cheap, but not free on real hardware)."""
     from repro.hub import TuningHub
     if hub is None:
         hub = TuningHub(root)
     store = hub.store
     devs = store.devices()
     print(f"store {store.root}: {len(devs)} device(s)")
+    if drift:
+        print(f"  {'device':14s} {'records':>7s} {'tasks':>5s} "
+              f"{'fp-shift':>8s} {'rank-acc':>8s} {'ver':>4s} status")
     for d in devs:
-        print(f"  {d:14s} {store.count(d):6d} records, "
-              f"{len(store.task_keys(d)):4d} tasks")
+        if not drift:
+            print(f"  {d:14s} {store.count(d):6d} records, "
+                  f"{len(store.task_keys(d)):4d} tasks")
+            continue
+        row = hub.lifecycle.drift_summary(d)
+        acc = row["rank_accuracy"]
+        acc_s = "-" if math.isnan(acc) else f"{acc:.3f}"
+        ver = "-" if row["version"] is None else str(row["version"])
+        print(f"  {d:14s} {store.count(d):7d} {len(store.task_keys(d)):5d} "
+              f"{row['fingerprint_shift']:8.4f} {acc_s:>8s} {ver:>4s} "
+              f"{row['status']}")
     fps = store.fingerprints()
     if fps:
         print(f"fingerprints: {sorted(fps)}")
     per_dev = hub.pending_by_device()
     print(f"queue: depth={hub.pending()} inflight={hub.inflight()} "
-          f"scheduler={hub.scheduler}")
+          f"scheduler={hub.scheduler} refresh={hub.refresh}")
     for d, n in per_dev.items():
         print(f"  {d:14s} {n:6d} pending")
+    return 0
+
+
+def print_lineage(root: str, device=None) -> int:
+    """Model lineage per device: version chain, triggers, watermarks."""
+    from repro.hub import TuningHub
+    hub = TuningHub(root)
+    devices = [device] if device else hub.store.devices()
+    shown = 0
+    for dev in devices:
+        entries = hub.store.model_lineage(dev)
+        if not entries:
+            continue
+        shown += 1
+        print(f"{dev}: {len(entries)} version(s), serving="
+              f"{hub.store.latest_model_version(dev)}")
+        print(f"  {'ver':>4s} {'parent':>6s} {'status':8s} {'model':12s} "
+              f"{'records':>7s} {'rank-acc':>8s} {'dist':>9s} trigger")
+        for e in entries:
+            acc = e.get("rank_accuracy")
+            dist = e.get("param_distance")
+            print(f"  {e['version']:4d} "
+                  f"{'-' if e.get('parent') is None else e['parent']:>6} "
+                  f"{e.get('status', '?'):8s} {str(e.get('model')):12s} "
+                  f"{'-' if e.get('records_seen') is None else e['records_seen']:>7} "
+                  f"{'-' if acc is None else format(acc, '.3f'):>8} "
+                  f"{'-' if dist is None else format(dist, '.2e'):>9} "
+                  f"{e.get('trigger', '')}")
+    if not shown:
+        print("no model lineage recorded"
+              + (f" for {device}" if device else ""))
     return 0
 
 
@@ -105,7 +218,17 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-budget end-to-end serving check (CI leg)")
     ap.add_argument("--stats", action="store_true",
-                    help="print record-store statistics and exit")
+                    help="print record-store statistics (+ drift columns) "
+                         "and exit")
+    ap.add_argument("--lineage", action="store_true",
+                    help="print model lineage (all devices, or --device)")
+    ap.add_argument("--compact", action="store_true",
+                    help="rewrite store shards dropping duplicate "
+                         "(task, knobs, trial) rows, then exit")
+    ap.add_argument("--refresh", action="store_true",
+                    help="enable continual-learning auto-refresh of saved "
+                         "cost models after tuning jobs (with --smoke: run "
+                         "the refresh smoke leg)")
     ap.add_argument("--device", default=None,
                     help="serve/tune configs for this device")
     ap.add_argument("--dnn", default=None,
@@ -120,12 +243,22 @@ def main():
     args = ap.parse_args()
 
     if args.smoke:
-        return run_smoke(args.root)
+        return run_smoke(args.root, refresh=args.refresh)
     if args.stats:
         return print_stats(args.root)
+    if args.lineage:
+        return print_lineage(args.root, args.device)
+    if args.compact:
+        from repro.hub import RecordStore
+        import os
+        store = RecordStore(os.path.join(args.root, "store"))
+        dropped = store.compact()
+        print(f"[hub] compacted {store.root}: {dropped} duplicate/torn "
+              f"row(s) dropped")
+        return 0
     if not args.device:
-        print("nothing to do: pass --smoke, --stats, or --device "
-              "(see --help)", file=sys.stderr)
+        print("nothing to do: pass --smoke, --stats, --lineage, --compact, "
+              "or --device (see --help)", file=sys.stderr)
         return 2
 
     from repro.autotune.tasks import arch_tasks, paper_dnn_tasks
@@ -141,7 +274,8 @@ def main():
         return 2
 
     hub = TuningHub(args.root, trials_per_task=args.trials,
-                    strategy=args.strategy)
+                    strategy=args.strategy,
+                    refresh="auto" if args.refresh else "off")
     if args.bootstrap:
         n = bootstrap_store(hub.store, args.bootstrap.split(","), tasks)
         print(f"[hub] bootstrapped {n} records")
@@ -158,6 +292,10 @@ def main():
         print(f"[hub] job: {len(r.tasks)} task(s), "
               f"{r.total_measurements} measurements, "
               f"{r.total_search_seconds:.1f}s simulated search time")
+    hub.join_refreshes()
+    if args.refresh:
+        print(f"[hub] continual refresh: {hub.stats.refreshes} accepted, "
+              f"{hub.stats.refresh_rejects} rejected")
     print(f"[hub] registry -> {hub.registry.path}; stats: {hub.stats}")
     return 0
 

@@ -1,0 +1,669 @@
+"""Continual Learning & Model Lifecycle tests.
+
+Covers: replay determinism (in-process and cross-process, mirroring the
+fingerprint determinism test), class balance and mixing; the mask-anchored
+continual update (anchored params stay near the anchor, free params move);
+drift detectors (typed reports, no-baseline semantics); versioned model
+lineage in the store (parent chain, retire, family mismatch, legacy
+flat-file fallback); store.compact() (duplicate + torn-line handling);
+ModelLifecycle state machine + the held-out no-regression guard; the
+TuningHub refresh integration; and the launch.hub --stats drift column.
+"""
+import dataclasses
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autotune.space import ProgramConfig, Workload, default_config
+from repro.configs.moses import DEFAULT as MCFG
+from repro.continual import (CALIBRATION, FINGERPRINT, LifecycleConfig,
+                             ModelLifecycle, ReplayBuffer, ReplayConfig,
+                             anchor_weights, anchored_train, build_records,
+                             calibration_drift, detect_drift, device_rows,
+                             fingerprint_drift, newest_records, split_tail)
+from repro.core.cost_model import (Records, pairwise_rank_accuracy,
+                                   param_distance, rank_accuracy,
+                                   resolve_cost_model, save_params)
+from repro.hub import RecordStore, bootstrap_store, device_fingerprint
+from repro.hub.store import SCHEMA_VERSION
+
+WL_A = Workload("matmul", (256, 256, 128), name="a")
+WL_B = Workload("matmul", (512, 256, 128), name="b")
+CFG_A = default_config(WL_A)
+
+TINY_CFG = dataclasses.replace(
+    MCFG, online_epochs=2, adaptation_epochs=2, population_size=32,
+    evolution_rounds=2, top_k_measure=8)
+
+TINY_LC = LifecycleConfig(window=8, min_fresh=4, refresh_epochs=2,
+                          replay=ReplayConfig(per_task=8))
+
+
+def _boot(store, devices=("tpu_v5e",), n=16):
+    return bootstrap_store(store, devices, [WL_A, WL_B],
+                           programs_per_task=n)
+
+
+# ---------------------------------------------------------------------------
+# cost-model helpers
+# ---------------------------------------------------------------------------
+
+
+class TestRankAccuracy:
+    def test_perfect_and_inverted(self):
+        y = np.array([0.1, 0.5, 1.0], np.float32)
+        g = np.zeros(3, np.int32)
+        assert pairwise_rank_accuracy(y, y, g) == 1.0
+        assert pairwise_rank_accuracy(-y, y, g) == 0.0
+
+    def test_ties_in_labels_skipped(self):
+        y = np.array([1.0, 1.0, 0.5], np.float32)
+        s = np.array([0.0, 9.0, -1.0], np.float32)
+        g = np.zeros(3, np.int32)
+        # only the two (tied-free) pairs against the 0.5 row count
+        assert pairwise_rank_accuracy(s, y, g) == 1.0
+
+    def test_no_pairs_is_nan(self):
+        assert math.isnan(pairwise_rank_accuracy(
+            np.zeros(2), np.ones(2), np.array([0, 1])))
+
+    def test_groups_respected(self):
+        # cross-group inversions must not count
+        y = np.array([0.1, 1.0, 1.0, 0.1], np.float32)
+        s = np.array([0.0, 1.0, 0.0, 1.0], np.float32)
+        g = np.array([0, 0, 1, 1], np.int32)
+        assert pairwise_rank_accuracy(s, y, g) == 0.5
+
+    def test_rank_accuracy_on_records(self):
+        x = np.random.RandomState(0).randn(16, 164).astype(np.float32)
+        recs = Records(x=x, y=np.linspace(0, 1, 16).astype(np.float32),
+                       g=np.zeros(16, np.int32))
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        params = model.init(jax.random.PRNGKey(0))
+        acc = rank_accuracy(params, recs, predict_fn=model.batched_predict)
+        assert 0.0 <= acc <= 1.0
+
+
+class TestParamDistance:
+    def test_identity_zero(self):
+        p = {"w": np.ones((3, 3), np.float32)}
+        assert param_distance(p, p) == 0.0
+
+    def test_mask_restricts(self):
+        a = {"w": np.ones(4, np.float32), "v": np.ones(4, np.float32)}
+        b = {"w": np.ones(4, np.float32), "v": np.zeros(4, np.float32)}
+        only_w = {"w": np.ones(4, np.float32), "v": np.zeros(4, np.float32)}
+        assert param_distance(a, b) > 0
+        assert param_distance(a, b, mask=only_w) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# replay
+# ---------------------------------------------------------------------------
+
+
+class TestReplay:
+    def _store(self, tmp_path, n=16):
+        store = RecordStore(str(tmp_path / "s"))
+        _boot(store, n=n)
+        return store
+
+    def test_deterministic_in_process(self, tmp_path):
+        store = self._store(tmp_path)
+        a = ReplayBuffer(store, "tpu_v5e", ReplayConfig(per_task=8)).sample()
+        b = ReplayBuffer(store, "tpu_v5e", ReplayConfig(per_task=8)).sample()
+        np.testing.assert_array_equal(a.x, b.x)
+        np.testing.assert_array_equal(a.raw_throughput, b.raw_throughput)
+
+    def test_seed_changes_sample(self, tmp_path):
+        store = self._store(tmp_path, n=32)
+        a = ReplayBuffer(store, "tpu_v5e",
+                         ReplayConfig(per_task=8, seed=0)).sample()
+        b = ReplayBuffer(store, "tpu_v5e",
+                         ReplayConfig(per_task=8, seed=1)).sample()
+        assert not np.array_equal(a.raw_throughput, b.raw_throughput)
+
+    def test_deterministic_across_processes(self, tmp_path):
+        """Same seed + same store => identical replay batches in another
+        process (the subprocess leg, mirroring the fingerprint test)."""
+        store = self._store(tmp_path)
+        local = ReplayBuffer(store, "tpu_v5e",
+                             ReplayConfig(per_task=8)).sample()
+        code = (
+            "import json, numpy as np;"
+            "from repro.hub.store import RecordStore;"
+            "from repro.continual import ReplayBuffer, ReplayConfig;"
+            f"store = RecordStore({str(tmp_path / 's')!r});"
+            "r = ReplayBuffer(store, 'tpu_v5e',"
+            "                 ReplayConfig(per_task=8)).sample();"
+            "print(json.dumps([r.raw_throughput.astype(float).tolist(),"
+            "                  r.g.astype(int).tolist()]))")
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src)
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, check=True)
+        raw, g = json.loads(out.stdout)
+        np.testing.assert_array_equal(
+            local.raw_throughput, np.asarray(raw, np.float32))
+        np.testing.assert_array_equal(local.g, np.asarray(g, np.int32))
+
+    def test_class_balance_caps_lopsided_shards(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        rng = np.random.RandomState(0)
+        from repro.autotune.space import random_config
+        for i in range(40):                      # fat task A
+            store.put("d", WL_A, random_config(WL_A, rng), 10.0 + i)
+        for i in range(5):                       # thin task B
+            store.put("d", WL_B, random_config(WL_B, rng), 20.0 + i)
+        store.flush()
+        sample = ReplayBuffer(store, "d", ReplayConfig(per_task=8)).sample()
+        counts = np.bincount(sample.g)
+        assert counts[0] == 8                    # capped at per_task
+        assert counts[1] == 5                    # everything the shard has
+
+    def test_exclude_tail_disjoint_from_fresh(self, tmp_path):
+        store = self._store(tmp_path)
+        rows = device_rows(store, "tpu_v5e")
+        _, tail = split_tail(rows, 4)
+        buf = ReplayBuffer(store, "tpu_v5e", ReplayConfig(per_task=64),
+                           exclude_tail=4)
+        sampled = buf.sample_rows()
+        for key, tail_rows in tail.items():
+            tail_ids = {json.dumps(r, sort_keys=True) for r in tail_rows}
+            got = {json.dumps(r, sort_keys=True)
+                   for r in sampled.get(key, [])}
+            assert not (tail_ids & got)
+
+    def test_mix_ratio_and_disjoint_groups(self, tmp_path):
+        store = self._store(tmp_path, n=32)
+        buf = ReplayBuffer(store, "tpu_v5e",
+                           ReplayConfig(per_task=32, fresh_ratio=0.5))
+        rows = device_rows(store, "tpu_v5e")
+        _, tail = split_tail(rows, 8)
+        fresh = build_records(tail)
+        mix = buf.mix(fresh)
+        n_replay = len(mix) - len(fresh)
+        # fresh_ratio 0.5 => about one replay row per fresh row
+        assert abs(n_replay - len(fresh)) <= 1
+        # fresh groups are offset past every replay group
+        assert len(np.unique(mix.g)) == 4
+        # per-group labels re-normalized over the mixed set
+        for g in np.unique(mix.g):
+            assert mix.y[mix.g == g].max() == pytest.approx(1.0)
+
+    def test_mix_fresh_ratio_one_disables_replay(self, tmp_path):
+        store = self._store(tmp_path)
+        buf = ReplayBuffer(store, "tpu_v5e",
+                           ReplayConfig(per_task=8, fresh_ratio=1.0))
+        fresh = build_records(split_tail(device_rows(store, "tpu_v5e"),
+                                         4)[1])
+        assert len(buf.mix(fresh)) == len(fresh)
+
+
+# ---------------------------------------------------------------------------
+# regularize
+# ---------------------------------------------------------------------------
+
+
+class TestAnchoredTrain:
+    def _records(self, n=32, seed=0):
+        rng = np.random.RandomState(seed)
+        x = rng.randn(n, 164).astype(np.float32)
+        raw = rng.rand(n).astype(np.float32) + 0.1
+        g = np.zeros(n, np.int32)
+        return Records(x=x, y=raw / raw.max(), g=g, raw_throughput=raw)
+
+    def test_deterministic(self):
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        params = model.init(jax.random.PRNGKey(0))
+        recs = self._records()
+        a, _ = anchored_train(model, params, recs, epochs=2, seed=3)
+        b, _ = anchored_train(model, params, recs, epochs=2, seed=3)
+        assert param_distance(a, b) == 0.0
+
+    def test_strong_anchor_pins_masked_params(self):
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        params = model.init(jax.random.PRNGKey(0))
+        recs = self._records()
+        w = anchor_weights(model, params, recs, ratio=0.5, strength=1e4)
+        free, _ = anchored_train(model, params, recs, anchor=params,
+                                 epochs=3, seed=0)
+        pinned, _ = anchored_train(model, params, recs, anchor=params,
+                                   weights=w, epochs=3, seed=0)
+        mask = {k: np.asarray(v) / 1e4 for k, v in w.items()}
+        # inside the ticket the huge anchor wins; outside it trains freely
+        assert param_distance(pinned, params, mask=mask) < \
+            param_distance(free, params, mask=mask) * 0.2
+        inv = {k: 1.0 - m for k, m in mask.items()}
+        assert param_distance(pinned, params, mask=inv) > 0.0
+
+    def test_anchor_weights_cover_ratio(self):
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        params = model.init(jax.random.PRNGKey(1))
+        w = anchor_weights(model, params, self._records(), ratio=0.25,
+                           strength=2.0)
+        tot = sum(np.asarray(v).size for v in w.values())
+        on = sum(float((np.asarray(v) > 0).sum()) for v in w.values())
+        assert on / tot == pytest.approx(0.25, abs=0.02)
+        assert max(float(np.asarray(v).max()) for v in w.values()) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# drift
+# ---------------------------------------------------------------------------
+
+
+class TestDrift:
+    def test_fingerprint_no_baseline(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        rep = fingerprint_drift(store, "tpu_v5e")
+        assert not rep.drifted and rep.detail == "no saved fingerprint"
+
+    def test_fingerprint_self_is_stable(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.put_fingerprint("tpu_v5e", device_fingerprint("tpu_v5e"))
+        rep = fingerprint_drift(store, "tpu_v5e")
+        assert rep.kind == FINGERPRINT
+        assert not rep.drifted and abs(rep.value) < 1e-5
+
+    def test_fingerprint_shift_detected(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        # persisted vector from a very different chip: a drifted device
+        store.put_fingerprint("tpu_v5e", device_fingerprint("tpu_edge"))
+        rep = fingerprint_drift(store, "tpu_v5e")
+        assert rep.drifted and rep.value > 0.02
+
+    def test_calibration_no_params(self, tmp_path):
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        rep = calibration_drift(model, None, build_records({}), "d")
+        assert not rep.drifted and rep.detail == "no saved params"
+
+    def test_calibration_detects_misranking(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        _boot(store, n=24)
+        recs = newest_records(store, "tpu_v5e", 16)
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        good, _ = model.train(model.init(jax.random.PRNGKey(0)),
+                              store.records("tpu_v5e"), epochs=8)
+        rep_good = calibration_drift(model, good, recs, "tpu_v5e",
+                                     threshold=0.55)
+        # an inverted scorer must read as drifted
+        bad = jax.tree.map(lambda a: -a, good)
+        rep_bad = calibration_drift(model, bad, recs, "tpu_v5e",
+                                    threshold=0.55)
+        assert rep_good.value > rep_bad.value
+        assert rep_bad.drifted and not rep_good.drifted
+
+    def test_detect_drift_emits_both_kinds(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        _boot(store, n=12)
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        reports = detect_drift(store, "tpu_v5e", model=model,
+                               params=model.init(jax.random.PRNGKey(0)))
+        assert [r.kind for r in reports] == [FINGERPRINT, CALIBRATION]
+
+
+# ---------------------------------------------------------------------------
+# store: versioned params + lineage, compact
+# ---------------------------------------------------------------------------
+
+
+def _params(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"w0": rng.randn(4, 2).astype(np.float32),
+            "b0": np.zeros((2,), np.float32)}
+
+
+class TestVersionedParams:
+    def test_versions_and_parent_chain(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.save_model_params("d", _params(0), "mlp")
+        store.save_model_params("d", _params(1), "mlp",
+                                lineage={"trigger": "drift:fingerprint",
+                                         "records_seen": 42})
+        lineage = store.model_lineage("d")
+        assert [e["version"] for e in lineage] == [1, 2]
+        assert lineage[1]["parent"] == 1 and lineage[0]["parent"] is None
+        assert lineage[1]["trigger"] == "drift:fingerprint"
+        assert lineage[1]["records_seen"] == 42
+        assert store.latest_model_version("d") == 2
+        np.testing.assert_array_equal(
+            np.asarray(store.load_model_params("d", "mlp")["w0"]),
+            _params(1)["w0"])
+
+    def test_pinned_version_load(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.save_model_params("d", _params(0), "mlp")
+        store.save_model_params("d", _params(1), "mlp")
+        np.testing.assert_array_equal(
+            np.asarray(store.load_model_params("d", "mlp", version=1)["w0"]),
+            _params(0)["w0"])
+
+    def test_retire_falls_back_to_parent(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.save_model_params("d", _params(0), "mlp")
+        store.save_model_params("d", _params(1), "mlp")
+        assert store.retire_model("d")            # retires v2
+        assert store.latest_model_version("d") == 1
+        np.testing.assert_array_equal(
+            np.asarray(store.load_model_params("d", "mlp")["w0"]),
+            _params(0)["w0"])
+        assert store.retire_model("d")            # retires v1 too
+        assert store.load_model_params("d", "mlp") is None
+        assert not store.retire_model("d")        # nothing left
+
+    def test_family_mismatch_skipped(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.save_model_params("d", _params(0), "mlp")
+        store.save_model_params("d", _params(1), "residual-mlp")
+        # newest matching family wins, not newest overall
+        np.testing.assert_array_equal(
+            np.asarray(store.load_model_params("d", "mlp")["w0"]),
+            _params(0)["w0"])
+        assert store.load_model_params("d", "other") is None
+
+    def test_legacy_flat_file_fallback(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        legacy = store._params_path("d")
+        os.makedirs(os.path.dirname(legacy), exist_ok=True)
+        save_params(legacy, _params(7), meta={"model": "mlp"})
+        assert store.latest_model_version("d") == 0
+        np.testing.assert_array_equal(
+            np.asarray(store.load_model_params("d", "mlp")["w0"]),
+            _params(7)["w0"])
+        # a versioned save supersedes the legacy file and chains to it
+        store.save_model_params("d", _params(8), "mlp")
+        lineage = store.model_lineage("d")
+        assert [e["version"] for e in lineage] == [0, 1]
+        assert lineage[1]["parent"] == 0
+        np.testing.assert_array_equal(
+            np.asarray(store.load_model_params("d", "mlp")["w0"]),
+            _params(8)["w0"])
+
+
+class TestCompact:
+    def _shard(self, root, device="tpu_v5e"):
+        return next(
+            os.path.join(r, f)
+            for r, _, fs in os.walk(os.path.join(root, "records", device))
+            for f in fs if f.endswith(".jsonl"))
+
+    def test_drops_duplicates_first_wins(self, tmp_path):
+        root = str(tmp_path / "s")
+        store = RecordStore(root)
+        store.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        store.flush()
+        shard = self._shard(root)
+        with open(shard) as f:
+            line = f.readline().strip()
+        dup = json.loads(line)
+        dup["throughput_gflops"] = 55.0           # same dedup key
+        with open(shard, "a") as f:
+            f.write(json.dumps(dup) + "\n")
+            f.write(line + "\n")
+        fresh = RecordStore(root)
+        assert fresh.compact() == 2
+        recs = list(fresh.iter_device("tpu_v5e"))
+        assert len(recs) == 1
+        assert recs[0]["throughput_gflops"] == 100.0   # first occurrence
+
+    def test_torn_trailing_line_survives_compact(self, tmp_path):
+        """Regression: compacting a shard whose writer was killed mid-append
+        must keep every valid record and drop only the torn line."""
+        root = str(tmp_path / "s")
+        store = RecordStore(root)
+        store.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        store.put("tpu_v5e", WL_A, CFG_A, 90.0, trial=1)
+        store.flush()
+        shard = self._shard(root)
+        with open(shard, "a") as f:
+            f.write('{"schema": 1, "knobs": {"trunc')   # killed writer
+        fresh = RecordStore(root)
+        assert fresh.compact() == 1                     # the torn line
+        assert fresh.count("tpu_v5e") == 2
+        # compact is idempotent and reads see the rewritten shard
+        assert fresh.compact() == 0
+        assert RecordStore(root).count("tpu_v5e") == 2
+
+    def test_compact_flushes_buffered_first(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.put("tpu_v5e", WL_A, CFG_A, 100.0)
+        assert store.compact() == 0
+        assert RecordStore(str(tmp_path / "s")).count("tpu_v5e") == 1
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycle:
+    def _lc(self, tmp_path, **kw):
+        store = RecordStore(str(tmp_path / "s"))
+        _boot(store, n=16)
+        cfg = kw.pop("cfg", TINY_LC)
+        return ModelLifecycle(store, moses_cfg=TINY_CFG, cfg=cfg, **kw)
+
+    def test_initial_refresh_creates_v1(self, tmp_path):
+        lc = self._lc(tmp_path)
+        assert lc.status("tpu_v5e") == "absent"
+        res = lc.refresh("tpu_v5e", force=True)
+        assert res.accepted and res.version == 1 and res.parent is None
+        assert res.trigger == "initial"
+        assert lc.store.model_lineage("tpu_v5e")[-1]["trigger"] == "initial"
+        assert lc.serving_params("tpu_v5e") is not None
+        assert lc.status("tpu_v5e") == "fresh"
+
+    def test_guard_rejects_regressing_params(self, tmp_path, monkeypatch):
+        lc = self._lc(tmp_path)
+        assert lc.refresh("tpu_v5e", force=True).accepted
+        # force the training step to return garbage: the guard must refuse
+        # to ship it and the serving version must not change
+        def garbage(device, params, records, **kw):
+            return jax.tree.map(lambda a: -a, params), [0.0]
+        monkeypatch.setattr(lc.session(), "refresh_params", garbage)
+        res = lc.refresh("tpu_v5e", trigger="drift:test")
+        assert not res.accepted and "regress" in res.reason
+        assert lc.store.latest_model_version("tpu_v5e") == 1
+        assert res.holdout_accuracy_new < res.holdout_accuracy_old
+
+    def test_refresh_versions_chain(self, tmp_path):
+        lc = self._lc(tmp_path)
+        r1 = lc.refresh("tpu_v5e", force=True)
+        r2 = lc.refresh("tpu_v5e", trigger="drift:calibration", force=True)
+        if r2.accepted:               # guard may legitimately refuse
+            assert r2.parent == r1.version
+            assert (lc.store.model_lineage("tpu_v5e")[-1]["trigger"]
+                    == "drift:calibration")
+        else:
+            assert lc.store.latest_model_version("tpu_v5e") == r1.version
+
+    def test_min_fresh_floor(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        _boot(store, n=4)
+        lc = ModelLifecycle(store, moses_cfg=TINY_CFG,
+                            cfg=dataclasses.replace(TINY_LC, min_fresh=64))
+        res = lc.refresh("tpu_v5e")
+        assert not res.accepted and "min_fresh" in res.reason
+
+    def test_empty_device(self, tmp_path):
+        lc = ModelLifecycle(RecordStore(str(tmp_path / "s")),
+                            moses_cfg=TINY_CFG, cfg=TINY_LC)
+        res = lc.refresh("ghost", force=True)
+        assert not res.accepted and res.reason == "no records in store"
+
+    def test_decide_and_maybe_refresh(self, tmp_path):
+        lc = self._lc(tmp_path)
+        lc.refresh("tpu_v5e", force=True)
+        assert lc.decide("tpu_v5e") == "keep"
+        assert lc.maybe_refresh("tpu_v5e") is None
+        # drifted fingerprint -> refresh
+        lc.store.put_fingerprint("tpu_v5e", device_fingerprint("tpu_lite"))
+        assert lc.status("tpu_v5e") == "stale"
+        decision = lc.decide("tpu_v5e")
+        assert decision in ("refresh", "retire")
+        if decision == "refresh":
+            res = lc.maybe_refresh("tpu_v5e")
+            assert res is not None and res.trigger.startswith("drift:")
+
+    def test_retire_grade_drift(self, tmp_path):
+        lc = self._lc(tmp_path,
+                      cfg=dataclasses.replace(TINY_LC,
+                                              retire_threshold=0.0001))
+        lc.refresh("tpu_v5e", force=True)
+        lc.store.put_fingerprint("tpu_v5e", device_fingerprint("tpu_edge"))
+        assert lc.decide("tpu_v5e") == "retire"
+        res = lc.maybe_refresh("tpu_v5e")
+        assert res is not None and res.reason == "retired"
+        assert lc.store.latest_model_version("tpu_v5e") is None
+        assert lc.status("tpu_v5e") == "retired"
+        # the baseline re-anchored on retire: the same shift must not keep
+        # reporting drift (status is retired, not stale, and decide would
+        # see no fingerprint drift on a fresh probe)
+        rep = fingerprint_drift(lc.store, "tpu_v5e")
+        assert not rep.drifted
+
+    def test_retire_abandons_whole_lineage(self, tmp_path):
+        """retire() must not fall back to an even older version of the
+        same family — the whole chain is invalidated."""
+        lc = self._lc(tmp_path)
+        lc.refresh("tpu_v5e", force=True)
+        lc.refresh("tpu_v5e", force=True)
+        # a sibling family's lineage must survive our retire
+        lc.store.save_model_params("tpu_v5e", _params(3), "residual-mlp")
+        assert lc.retire("tpu_v5e")
+        assert lc.serving_params("tpu_v5e") is None
+        assert lc.store.latest_model_version("tpu_v5e", "mlp") is None
+        assert lc.store.latest_model_version(
+            "tpu_v5e", "residual-mlp") is not None
+
+    def test_accepted_drift_refresh_reanchors_fingerprint(self, tmp_path):
+        lc = self._lc(tmp_path)
+        lc.refresh("tpu_v5e", force=True)
+        # a drifted baseline: the persisted vector belongs to another chip
+        lc.store.put_fingerprint("tpu_v5e", device_fingerprint("tpu_lite"))
+        res = lc.maybe_refresh("tpu_v5e")
+        assert res is not None
+        if res.accepted:
+            # baseline re-anchored to the current probe: drift is resolved
+            # and the next check must not re-trigger forever
+            assert lc.decide("tpu_v5e") == "keep"
+        else:
+            # guard refused: baseline must stay drifted (still stale)
+            assert lc.decide("tpu_v5e") in ("refresh", "retire")
+
+    def test_drift_summary_shape(self, tmp_path):
+        lc = self._lc(tmp_path)
+        lc.refresh("tpu_v5e", force=True)
+        row = lc.drift_summary("tpu_v5e")
+        assert row["status"] == "fresh" and row["version"] == 1
+        assert abs(row["fingerprint_shift"]) < 1e-5
+        assert {r.kind for r in row["reports"]} == {FINGERPRINT,
+                                                    CALIBRATION}
+
+
+# ---------------------------------------------------------------------------
+# hub + launcher integration
+# ---------------------------------------------------------------------------
+
+
+class TestHubIntegration:
+    def test_sync_refresh_after_job(self, tmp_path):
+        from repro.hub import TuningHub
+        # calibration threshold 1.01: every job's device reads as drifted,
+        # so the post-job hook must run one (guarded) refresh
+        hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                        trials_per_task=16, pretrain_epochs=2,
+                        refresh="sync",
+                        lifecycle_cfg=dataclasses.replace(
+                            TINY_LC, calibration_threshold=1.01))
+        _boot(hub.store, devices=("tpu_v5e", "tpu_edge"))
+        r = hub.get_config("tpu_v5e_pro", WL_A)
+        assert not r.cache_hit
+        assert hub.stats.refreshes + hub.stats.refresh_rejects == 1
+        if hub.stats.refreshes:
+            assert hub.store.latest_model_version("tpu_v5e_pro") is not None
+
+    def test_refresh_off_by_default(self, tmp_path):
+        from repro.hub import TuningHub
+        hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                        trials_per_task=16, pretrain_epochs=2)
+        _boot(hub.store)
+        hub.get_config("tpu_v5e_pro", WL_A)
+        assert hub.stats.refreshes == 0 and hub.stats.refresh_rejects == 0
+
+    def test_auto_refresh_background(self, tmp_path):
+        from repro.hub import TuningHub
+        hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                        trials_per_task=16, pretrain_epochs=2,
+                        refresh="auto",
+                        lifecycle_cfg=dataclasses.replace(
+                            TINY_LC, calibration_threshold=1.01))
+        _boot(hub.store)
+        hub.get_config("tpu_v5e_pro", WL_A)
+        hub.join_refreshes()
+        assert hub.stats.refreshes + hub.stats.refresh_rejects == 1
+
+    def test_bad_refresh_mode_rejected(self, tmp_path):
+        from repro.hub import TuningHub
+        with pytest.raises(ValueError):
+            TuningHub(str(tmp_path / "hub"), refresh="sometimes")
+
+    def test_accepted_refresh_invalidates_dependent_selections(
+            self, tmp_path):
+        from repro.hub import TuningHub
+        hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                        trials_per_task=16, pretrain_epochs=2,
+                        lifecycle_cfg=dataclasses.replace(
+                            TINY_LC, calibration_threshold=1.01))
+        _boot(hub.store)
+        hub.get_config("tpu_v5e_pro", WL_A)
+        sel = hub.selection("tpu_v5e_pro")
+        assert sel is not None and sel.params_device == "tpu_v5e"
+        hub.refresh = "sync"
+        hub._run_refresh("tpu_v5e")   # source device gains a version
+        if hub.stats.refreshes:
+            assert hub.selection("tpu_v5e_pro") is None
+
+    def test_stats_drift_column(self, tmp_path, capsys):
+        from repro.hub import TuningHub
+        from repro.launch.hub import print_stats
+        root = str(tmp_path / "hub")
+        hub = TuningHub(root, moses_cfg=TINY_CFG,
+                        lifecycle_cfg=TINY_LC)
+        _boot(hub.store, n=16)
+        hub.store.put_fingerprint("tpu_v5e", device_fingerprint("tpu_v5e"))
+        hub.lifecycle.refresh("tpu_v5e", force=True)
+        assert print_stats(root, hub=hub) == 0
+        out = capsys.readouterr().out
+        header = next(ln for ln in out.splitlines() if "fp-shift" in ln)
+        assert "rank-acc" in header and "status" in header
+        row = next(ln for ln in out.splitlines()
+                   if ln.strip().startswith("tpu_v5e "))
+        assert "fresh" in row or "stale" in row
+        assert "0.0000" in row                     # no fingerprint shift
+
+
+class TestSessionRefreshParams:
+    def test_deterministic_and_isolated(self, tmp_path):
+        from repro.autotune.session import TuneSession
+        store = RecordStore(str(tmp_path / "s"))
+        _boot(store, n=16)
+        recs = store.records("tpu_v5e")
+        model = resolve_cost_model("mlp", MCFG.cost_model)
+        params = model.init(jax.random.PRNGKey(0))
+        session = TuneSession(moses_cfg=TINY_CFG, seed=5)
+        a, la = session.refresh_params("tpu_v5e", params, recs, epochs=2)
+        b, lb = session.refresh_params("tpu_v5e", params, recs, epochs=2)
+        assert param_distance(a, b) == 0.0 and la == lb
+        # a different device derives a different stream
+        c, _ = session.refresh_params("tpu_edge", params, recs, epochs=2)
+        assert param_distance(a, c) > 0.0
