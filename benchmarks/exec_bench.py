@@ -1,0 +1,119 @@
+"""Measurement-backend benchmark: thread pool vs process farm.
+
+Two questions the ISSUE-6 farm exists to answer, measured on real wall
+clock (not the simulated device clock):
+
+  1. THROUGHPUT: measurements/second for a GIL-holding measure_fn (a
+     pure-Python work loop standing in for candidate compile + launch
+     bookkeeping) on the thread backend vs the spawn farm. Threads
+     serialize on the GIL; processes don't — the farm's headroom is the
+     `process_speedup` metric. NB: the speedup scales with physical
+     cores; on a 1-core CI container expect ~1x (the farm can only
+     remove GIL contention, not conjure parallelism).
+  2. RECOVERY: wall seconds from an injected worker crash to the pool
+     completing a clean follow-up batch. The thread backend turns a crash
+     into an exception (recovery ~= 0 but a REAL segfault would kill the
+     campaign); the farm pays a worker respawn — `recovery_s` prices that
+     insurance.
+
+    PYTHONPATH=src python -m benchmarks.exec_bench [--n 64] [--workers 4]
+    PYTHONPATH=src python -m benchmarks.run --only exec   # BENCH_exec.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.autotune import devices as dev_mod
+from repro.autotune.devices import FaultInjector
+from repro.autotune.space import Workload, random_config
+from repro.sched import MeasurementExecutor
+
+WL = Workload("matmul", (512, 512, 256), name="bench")
+_WORK_ITERS = 250_000       # ~15-40 ms of GIL-holding python per
+                            # measurement — enough that per-instruction
+                            # pipe overhead doesn't swamp the comparison
+
+
+def busy_measure(wl, cfg, device, trial=0):
+    """Picklable measure_fn that holds the GIL for a few ms — the
+    stand-in for per-candidate compile/launch overhead."""
+    acc = 0
+    for i in range(_WORK_ITERS):
+        acc = (acc * 1103515245 + i) & 0x7FFFFFFF
+    return dev_mod.measure(wl, cfg, device, trial=trial)
+
+
+def _configs(n, seed=0):
+    rng = np.random.RandomState(seed)
+    out, seen = [], set()
+    while len(out) < n:
+        c = random_config(WL, rng)
+        if c.knobs not in seen:
+            seen.add(c.knobs)
+            out.append(c)
+    return out
+
+
+def _throughput(backend: str, n: int, workers: int) -> float:
+    cfgs = _configs(n)
+    with MeasurementExecutor(workers=workers, backend=backend,
+                             measure_fn=busy_measure) as ex:
+        ex.measure_batch(WL, cfgs[:workers], "tpu_v5e", trial=9)  # warm up
+        t0 = time.perf_counter()
+        outs = ex.measure_batch(WL, cfgs, "tpu_v5e")
+        dt = time.perf_counter() - t0
+    assert all(o.ok for o in outs)
+    return n / dt
+
+
+def _crash_recovery(backend: str, workers: int) -> float:
+    """Seconds from a crash landing to a clean `workers`-wide batch
+    completing on the (respawned) pool."""
+    fi = FaultInjector(crash=0.15, seed=7,
+                       kill_process=(backend == "process"))
+    cfgs = _configs(64, seed=1)
+    bad = next(c for c in cfgs if fi.fault_for(WL, c, 0) == "crash")
+    clean = [c for c in cfgs if fi.fault_for(WL, c, 0) is None][:workers]
+    with MeasurementExecutor(workers=workers, backend=backend, retries=0,
+                             measure_fn=fi) as ex:
+        ex.measure_batch(WL, clean, "tpu_v5e")          # boot the pool
+        t0 = time.perf_counter()
+        assert not ex.measure_batch(WL, [bad], "tpu_v5e")[0].ok
+        outs = ex.measure_batch(WL, clean, "tpu_v5e")   # post-crash service
+        dt = time.perf_counter() - t0
+    assert all(o.ok for o in outs)
+    return dt
+
+
+def run(n: int = 64, workers: int = 4) -> dict:
+    metrics = {}
+    for backend in ("thread", "process"):
+        mps = _throughput(backend, n, workers)
+        rec = _crash_recovery(backend, workers)
+        metrics[f"{backend}_meas_per_s"] = round(mps, 2)
+        metrics[f"{backend}_crash_recovery_s"] = round(rec, 4)
+        print(f"exec_{backend}_throughput,{1e6 / mps:.1f},"
+              f"{mps:.1f} meas/s ({workers} workers)")
+        print(f"exec_{backend}_recovery,{rec * 1e6:.0f},"
+              f"{rec:.3f} s crash->serving")
+    metrics["process_speedup"] = round(
+        metrics["process_meas_per_s"] / metrics["thread_meas_per_s"], 3)
+    print(f"exec_process_speedup,,{metrics['process_speedup']:.2f}x "
+          "over thread backend")
+    return metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=4)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n=args.n, workers=args.workers)
+
+
+if __name__ == "__main__":
+    main()

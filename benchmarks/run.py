@@ -15,6 +15,8 @@ Benchmarks (one per paper table/figure + system-level extras):
            artifacts/dryrun from repro.launch.dryrun)
   sched    scheduled vs serial tuning: best-latency-vs-budget curves and
            the draft-then-verify reduction (benchmarks/sched_bench.py)
+  exec     thread vs process measurement backends: throughput + crash
+           recovery time (benchmarks/exec_bench.py)
   continual lifecycle-refreshed vs frozen vs from-scratch cost models on a
            drifting device (benchmarks/continual_bench.py)
 
@@ -61,9 +63,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (continual_bench, crosstask, dataset_stats,
-                            fig4_inference_gain, fig5_search_efficiency,
-                            fig6_ratio_ablation, kernels_bench,
-                            roofline_table, sched_bench, table1_cmat)
+                            exec_bench, fig4_inference_gain,
+                            fig5_search_efficiency, fig6_ratio_ablation,
+                            kernels_bench, roofline_table, sched_bench,
+                            table1_cmat)
     from benchmarks.common import LARGE_TRIALS, SMALL_TRIALS
 
     small = 200 if args.full else SMALL_TRIALS
@@ -92,6 +95,7 @@ def main() -> None:
         "crosstask": lambda: crosstask.main(trials=small),
         "roofline": roofline_table.main,
         "sched": lambda: sched_bench.run(trials=small),
+        "exec": lambda: exec_bench.run(),
         "continual": lambda: continual_bench.run(),
     }
     picked = (args.only.split(",") if args.only else list(benches))

@@ -54,6 +54,11 @@ class TaskResult:
     # (trial matters: the simulator's noise redraws per trial, so the store
     # dedups on (task, config, trial)). None for legacy callers.
     measured: Optional[List[Tuple[ProgramConfig, float, int]]] = None
+    # configs whose measurement failed under the executor (crash, timeout,
+    # quarantine): (config, trial, error). The hub writes these to the store
+    # as error records so a refreshed model knows which configs are hostile.
+    # None for legacy callers / the serial loop (which has no executor).
+    poisoned: Optional[List[Tuple[ProgramConfig, int, str]]] = None
 
 
 @dataclasses.dataclass

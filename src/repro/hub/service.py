@@ -50,6 +50,7 @@ class HubStats:
     jobs: int = 0            # batched TuneSession jobs run
     dedup_skips: int = 0     # requests already pending/in-flight
     measurements: int = 0    # total new on-device measurements
+    poisoned: int = 0        # measurements that crashed/timed out/quarantined
     refreshes: int = 0       # accepted continual-refresh versions
     refresh_rejects: int = 0  # refresh attempts the guard (or floor) refused
 
@@ -86,6 +87,7 @@ class TuningHub:
                  seed: int = 0,
                  scheduler: str = "serial",
                  speculative: bool = False,
+                 executor=None,
                  refresh: str = "off",
                  lifecycle=None,
                  lifecycle_cfg=None):
@@ -105,6 +107,12 @@ class TuningHub:
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.scheduler = scheduler
         self.speculative = speculative
+        # measurement backend for gradient-scheduled jobs: a
+        # MeasurementExecutor instance, "thread" | "process", or None
+        # (campaign default). The serial path has no executor seam.
+        if executor is not None and scheduler != "gradient":
+            raise ValueError("executor= requires scheduler='gradient'")
+        self.executor = executor
         if refresh not in ("off", "sync", "auto"):
             raise ValueError(f"unknown refresh mode {refresh!r}; expected "
                              "'off', 'sync', or 'auto'")
@@ -368,11 +376,14 @@ class TuningHub:
             # improves, instead of a fixed per-task budget
             result = session.run_many([(device, tasks)], strategy=strategy,
                                       scheduler="gradient",
-                                      speculative=self.speculative)[0]
+                                      speculative=self.speculative,
+                                      executor=self.executor)[0]
         else:
             result = session.run(tasks, device, strategy)
         self.stats.jobs += 1
         self.stats.measurements += result.total_measurements
+        self.stats.poisoned += sum(len(t.poisoned or [])
+                                   for t in result.tasks)
         self.registry.save()
         self.store.flush()
         if self.refresh != "off":

@@ -53,21 +53,30 @@ def workload_from_record(rec: Dict[str, Any]) -> Workload:
 
 
 def _record_dict(device: str, wl: Workload, cfg: ProgramConfig,
-                 throughput: float, trial: int) -> Dict[str, Any]:
-    return {
+                 throughput: Optional[float], trial: int,
+                 error: Optional[str] = None) -> Dict[str, Any]:
+    rec = {
         "schema": SCHEMA_VERSION,
         "device": device,
         "task": {"kind": wl.kind, "dims": list(wl.dims), "name": wl.name,
                  "count": wl.count, "dtype_bytes": wl.dtype_bytes},
         "knobs": {k: int(v) for k, v in cfg.knobs},
-        "throughput_gflops": float(throughput),
+        "throughput_gflops": (None if throughput is None
+                              else float(throughput)),
         "trial": int(trial),
     }
+    if error is not None:
+        # poisoned measurement (crash / timeout / quarantine): the config is
+        # hostile on this device — worth remembering, never worth training on
+        rec["error"] = str(error)
+    return rec
 
 
 def _dedup_key(rec: Dict[str, Any]) -> Tuple:
+    # an error record and a later successful re-measurement of the same
+    # (knobs, trial) are DIFFERENT facts — both kept
     return (tuple(sorted((k, int(v)) for k, v in rec["knobs"].items())),
-            int(rec.get("trial", 0)))
+            int(rec.get("trial", 0)), bool(rec.get("error")))
 
 
 def _load_shard_file(path: str) -> List[Dict[str, Any]]:
@@ -150,9 +159,13 @@ class RecordStore:
         return self._index[key]
 
     def put(self, device: str, wl: Workload, cfg: ProgramConfig,
-            throughput: float, trial: int = 0) -> bool:
-        """Buffer one measured record; returns False on a dedup hit."""
-        rec = _record_dict(device, wl, cfg, throughput, trial)
+            throughput: Optional[float], trial: int = 0,
+            error: Optional[str] = None) -> bool:
+        """Buffer one measured record; returns False on a dedup hit. Pass
+        `error=` (and `throughput=None`) for a poisoned measurement — error
+        records persist alongside good ones but are excluded from training
+        reads (`iter_device` / `records`) unless asked for."""
+        rec = _record_dict(device, wl, cfg, throughput, trial, error=error)
         with self._lock:
             idx = self._ensure_index(device, wl.key())
             dk = _dedup_key(rec)
@@ -171,12 +184,16 @@ class RecordStore:
     def put_result(self, result) -> int:
         """Persist every measurement a `TuneResult` carries, under its real
         trial index (results produced before the `measured` field existed
-        contribute nothing)."""
+        contribute nothing). Poisoned configs (`TaskResult.poisoned`) are
+        written as error records; the return counts good records only."""
         n = 0
         for t in result.tasks:
             for cfg, thr, trial in (t.measured or []):
                 n += self.put(result.device, t.workload, cfg, thr,
                               trial=trial)
+            for cfg, trial, err in (getattr(t, "poisoned", None) or []):
+                self.put(result.device, t.workload, cfg, None,
+                         trial=trial, error=err)
         return n
 
     def flush(self) -> int:
@@ -221,16 +238,28 @@ class RecordStore:
             if name.endswith(".jsonl"):
                 yield from self._load_shard_cached(os.path.join(d, name))
 
-    def iter_device(self, device: str):
-        """All records for a device: persisted shards, then buffered."""
-        yield from self._iter_persisted(device)
+    def iter_device(self, device: str, include_errors: bool = False):
+        """All records for a device: persisted shards, then buffered.
+        Error (poisoned-measurement) records are skipped by default so
+        every training/featurization reader sees only real throughputs."""
+        for rec in self._iter_persisted(device):
+            if include_errors or not rec.get("error"):
+                yield rec
         with self._lock:
             pending = [r for (d, _), recs in sorted(self._buffer.items())
                        if d == device for r in recs]
-        yield from pending
+        for rec in pending:
+            if include_errors or not rec.get("error"):
+                yield rec
 
-    def count(self, device: str) -> int:
-        return sum(1 for _ in self.iter_device(device))
+    def count(self, device: str, include_errors: bool = False) -> int:
+        return sum(1 for _ in self.iter_device(
+            device, include_errors=include_errors))
+
+    def error_records(self, device: str) -> List[Dict[str, Any]]:
+        """Just the poisoned measurements for a device (diagnostics)."""
+        return [r for r in self.iter_device(device, include_errors=True)
+                if r.get("error")]
 
     def task_keys(self, device: str) -> List[str]:
         return sorted({workload_from_record(r).key()

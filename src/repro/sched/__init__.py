@@ -4,9 +4,11 @@ Three cooperating pieces (see docs/architecture.md, "Tuning Scheduler"):
 
   * `scheduler.run_campaign` — gradient-based allocation of measurement
     rounds across (device, workload) jobs under a global budget;
-  * `executor.MeasurementExecutor` — bounded thread-pool measurement
-    service with timeouts, retries, fault isolation, and deterministic
-    result ordering;
+  * `executor.MeasurementExecutor` — bounded measurement service with
+    timeouts, retries, fault isolation, crash quarantine, and deterministic
+    result ordering, selectable as ``backend="thread"`` (in-process pool)
+    or ``backend="process"`` (spawn-context farm, `farm.py` — survives
+    worker crashes and hard-kills wedged measurements);
   * `speculative.SpeculativeScorer` — Pruner-style draft-then-verify
     candidate screening in front of the full cost model.
 
@@ -15,7 +17,10 @@ Three cooperating pieces (see docs/architecture.md, "Tuning Scheduler"):
 """
 from repro.sched.engine import RoundStats, TaskTuner
 from repro.sched.executor import (MeasureOutcome, MeasureRequest,
-                                  MeasurementExecutor, batch_wall_seconds)
+                                  MeasurementExecutor, QuarantinedConfig,
+                                  ThreadMeasurementExecutor,
+                                  batch_wall_seconds, resolve_executor)
+from repro.sched.farm import ProcessMeasurementExecutor
 from repro.sched.scheduler import (CampaignResult, SchedulerConfig,
                                    TraceEntry, run_campaign)
 from repro.sched.speculative import (RandomFeatureDraft, RidgeDraft,
@@ -23,7 +28,9 @@ from repro.sched.speculative import (RandomFeatureDraft, RidgeDraft,
 
 __all__ = [
     "CampaignResult", "MeasureOutcome", "MeasureRequest",
-    "MeasurementExecutor", "RandomFeatureDraft", "RidgeDraft", "RoundStats",
-    "SchedulerConfig", "SpecStats", "SpeculativeScorer", "TaskTuner",
-    "TraceEntry", "batch_wall_seconds", "run_campaign",
+    "MeasurementExecutor", "ProcessMeasurementExecutor", "QuarantinedConfig",
+    "RandomFeatureDraft", "RidgeDraft", "RoundStats", "SchedulerConfig",
+    "SpecStats", "SpeculativeScorer", "TaskTuner",
+    "ThreadMeasurementExecutor", "TraceEntry", "batch_wall_seconds",
+    "resolve_executor", "run_campaign",
 ]

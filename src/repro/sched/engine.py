@@ -100,6 +100,10 @@ class TaskTuner:
         self.seen: set = set()
         self.measured: List[Tuple[ProgramConfig, float]] = []
         self.recorded: List[Tuple[ProgramConfig, float, int]] = []
+        # configs whose measurement failed (crash / timeout / quarantine):
+        # (config, trial, error) — surfaced on TaskResult.poisoned so the
+        # hub can persist them as error records instead of losing the signal
+        self.poisoned: List[Tuple[ProgramConfig, int, str]] = []
         self.traj: List[float] = []
         self.cache = FeatureCache()
         self.builder = RecordsBuilder()
@@ -164,6 +168,8 @@ class TaskTuner:
         for out, f in zip(outcomes, feats):
             if not out.ok:
                 failed += 1           # paid for, but poisoned: no record
+                self.poisoned.append((out.request.config, out.request.trial,
+                                      out.error or "failed"))
                 continue
             cfg, thr = out.request.config, out.throughput
             self.measured.append((cfg, thr))
@@ -238,6 +244,8 @@ class TaskTuner:
                 self.recorded.append((top, outcome.throughput, 97))
                 self.best_thr = max(self.best_thr, outcome.throughput)
                 self.traj.append(self.best_thr)
+            else:
+                self.poisoned.append((top, 97, outcome.error or "failed"))
             self.search_seconds += outcome.seconds
             self.meas_seconds += outcome.seconds
         if not self.measured:       # nothing survived: vendor default
@@ -246,9 +254,11 @@ class TaskTuner:
                                          dev_mod.DEVICES[self.device],
                                          noisy=False)
             return TaskResult(self.wl, cfg, self.wl.flops / lat / 1e9, lat,
-                              0, self.search_seconds, self.traj, measured=[])
+                              0, self.search_seconds, self.traj, measured=[],
+                              poisoned=self.poisoned)
         self._refresh_best()
         lat = self.best_latency
         return TaskResult(self.wl, self.best_cfg, self.wl.flops / lat / 1e9,
                           lat, len(self.measured), self.search_seconds,
-                          self.traj, measured=self.recorded)
+                          self.traj, measured=self.recorded,
+                          poisoned=self.poisoned)

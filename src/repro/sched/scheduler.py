@@ -36,7 +36,7 @@ from repro.autotune import devices as dev_mod
 from repro.configs.moses import MosesConfig
 from repro.core.cost_model import CostModel, Records, resolve_cost_model
 from repro.sched.engine import TaskTuner
-from repro.sched.executor import MeasurementExecutor
+from repro.sched.executor import MeasurementExecutor, resolve_executor
 from repro.sched.speculative import (RandomFeatureDraft, SpecStats,
                                      SpeculativeScorer)
 
@@ -151,7 +151,7 @@ def run_campaign(
     budget_seconds: Optional[float] = None,
     total_trials: Optional[int] = None,
     sched: Optional[SchedulerConfig] = None,
-    executor: Optional[MeasurementExecutor] = None,
+    executor: Union[MeasurementExecutor, str, None] = None,
     speculative: bool = False,
     keep_frac: float = 0.35,
     ratio_override: Optional[float] = None,
@@ -183,8 +183,9 @@ def run_campaign(
     strat_label = strategy_name(strategy)
     trials = (trials_per_task if trials_per_task is not None
               else moses_cfg.small_trials)
-    own_executor = executor is None
-    executor = executor or MeasurementExecutor(workers=4)
+    # executor may be an instance, a backend name ("thread" | "process"),
+    # or None (default thread pool); owned pools are shut down on exit
+    executor, own_executor = resolve_executor(executor, workers=4)
     spec_stats = SpecStats() if speculative else None
 
     # --- build one prepared TaskTuner per (device, workload) -------------

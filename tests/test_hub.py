@@ -421,3 +421,70 @@ class TestFlushDeterminism:
         assert hub.inflight() == 0
         hub.flush()
         assert hub.pending_by_device() == {}
+
+
+class TestPoisonedRecords:
+    """Satellite (ISSUE 6): poisoned measurements flow executor -> TaskResult
+    -> store error records -> HubStats, without ever contaminating the
+    training corpus."""
+
+    def test_store_error_records_coexist_and_stay_out_of_training(
+            self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        assert store.put("tpu_v5e", WL_A, CFG_A, 100.0, trial=0)
+        assert store.put("tpu_v5e", WL_A, CFG_A2, None, trial=0,
+                         error="worker process died")
+        # an error record and a good one of the SAME identity are distinct
+        # facts: the config crashed once and later measured fine
+        assert store.put("tpu_v5e", WL_A, CFG_A2, 50.0, trial=0)
+        assert not store.put("tpu_v5e", WL_A, CFG_A2, None, trial=0,
+                             error="worker process died")   # dedup
+        assert store.flush() == 3
+        loaded = RecordStore(str(tmp_path / "s"))
+        # training reads never see the poisoned row
+        assert loaded.count("tpu_v5e") == 2
+        recs = loaded.records("tpu_v5e")
+        assert sorted(recs.raw_throughput.tolist()) == [50.0, 100.0]
+        # diagnostics do
+        assert loaded.count("tpu_v5e", include_errors=True) == 3
+        errs = loaded.error_records("tpu_v5e")
+        assert len(errs) == 1
+        assert errs[0]["error"] == "worker process died"
+        assert errs[0]["throughput_gflops"] is None
+
+    def test_flush_with_poisoned_configs(self, tmp_path):
+        """An executor injecting crashes during a gradient-scheduled hub job:
+        winners still land in the Registry, poisoned measurements are
+        persisted with `error` set, and HubStats counts them."""
+        from repro.autotune.devices import FaultInjector
+        from repro.sched import MeasurementExecutor
+        fi = FaultInjector(crash=0.10, seed=13)
+        with MeasurementExecutor(workers=2, retries=0, measure_fn=fi) as ex:
+            hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                            trials_per_task=16, pretrain_epochs=2,
+                            scheduler="gradient", executor=ex)
+            _boot(hub.store)
+            target = "tpu_v5e_pro"
+            hub.request(target, WL_A)
+            hub.request(target, WL_B)
+            results = hub.flush()
+        assert len(results) == 1
+        # winners served despite the hostile candidates
+        assert hub.registry.lookup(target, WL_A) is not None
+        assert hub.registry.lookup(target, WL_B) is not None
+        assert hub.stats.measurements > 0
+        assert hub.stats.poisoned > 0, \
+            "fault map never fired during the job; reseed the injector"
+        errs = hub.store.error_records(target)
+        assert len(errs) == hub.stats.poisoned
+        assert all(e["error"] and e["throughput_gflops"] is None
+                   for e in errs)
+        # the poisoned rows are already persisted (flush ran) and excluded
+        # from the device's training corpus
+        persisted = RecordStore(os.path.join(str(tmp_path / "hub"), "store"))
+        assert len(persisted.error_records(target)) == len(errs)
+        assert persisted.count(target) == hub.stats.measurements
+
+    def test_executor_requires_gradient_scheduler(self, tmp_path):
+        with pytest.raises(ValueError, match="gradient"):
+            TuningHub(str(tmp_path / "hub"), executor="process")
