@@ -19,11 +19,14 @@ Benchmarks (one per paper table/figure + system-level extras):
            recovery time (benchmarks/exec_bench.py)
   continual lifecycle-refreshed vs frozen vs from-scratch cost models on a
            drifting device (benchmarks/continual_bench.py)
+  hub      hub serving: indexed/cached get_config vs full-shard scans +
+           multi-process server QPS under concurrent clients
+           (benchmarks/serve_hub_bench.py)
 
-Suites whose runner returns a metrics dict (sched, continual) additionally
-write a standardized ``BENCH_<suite>.json`` at the repo root — suite name,
-per-metric rows, and the PR timestamp passed via --timestamp — so the perf
-trajectory across PRs is machine-readable.
+Suites whose runner returns a metrics dict (sched, continual, hub)
+additionally write a standardized ``BENCH_<suite>.json`` at the repo root —
+suite name, per-metric rows, and the PR timestamp passed via --timestamp —
+so the perf trajectory across PRs is machine-readable.
 """
 from __future__ import annotations
 
@@ -66,7 +69,7 @@ def main() -> None:
                             exec_bench, fig4_inference_gain,
                             fig5_search_efficiency, fig6_ratio_ablation,
                             kernels_bench, roofline_table, sched_bench,
-                            table1_cmat)
+                            serve_hub_bench, table1_cmat)
     from benchmarks.common import LARGE_TRIALS, SMALL_TRIALS
 
     small = 200 if args.full else SMALL_TRIALS
@@ -97,6 +100,7 @@ def main() -> None:
         "sched": lambda: sched_bench.run(trials=small),
         "exec": lambda: exec_bench.run(),
         "continual": lambda: continual_bench.run(),
+        "hub": lambda: serve_hub_bench.run(),
     }
     picked = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -1,9 +1,38 @@
-from repro.autotune import (dataset, devices, evolution, registry, session,
-                            space, strategies, tasks, tuner)
-from repro.autotune.session import TuneSession
-from repro.autotune.strategies import (STRATEGIES, Strategy,
-                                       register_strategy, resolve_strategy)
+"""Autotuning stack: config space, strategies, sessions, and the registry.
 
-__all__ = ["dataset", "devices", "evolution", "registry", "session", "space",
-           "strategies", "tasks", "tuner", "TuneSession", "STRATEGIES",
-           "Strategy", "register_strategy", "resolve_strategy"]
+Submodules and names resolve lazily (PEP 562): `space` and `registry` are
+import-light (numpy + stdlib) and are all that hub serving reader/client
+processes touch, while `session`/`tuner`/`strategies` pull in jax. Eager
+package imports would make every registry lookup pay for the full tuning
+stack.
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("dataset", "devices", "evolution", "registry", "session",
+               "space", "strategies", "tasks", "tuner")
+_EXPORTS = {
+    "TuneSession": "repro.autotune.session",
+    "STRATEGIES": "repro.autotune.strategies",
+    "Strategy": "repro.autotune.strategies",
+    "register_strategy": "repro.autotune.strategies",
+    "resolve_strategy": "repro.autotune.strategies",
+}
+
+__all__ = sorted(set(_SUBMODULES) | set(_EXPORTS))
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        value = importlib.import_module(f"{__name__}.{name}")
+    elif name in _EXPORTS:
+        value = getattr(importlib.import_module(_EXPORTS[name]), name)
+    else:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

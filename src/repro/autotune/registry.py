@@ -24,9 +24,36 @@ class Registry:
     def __init__(self, path: Optional[str] = None):
         self.path = path or _DEFAULT_PATH
         self._data: Dict[str, Dict[str, dict]] = {}
-        if os.path.exists(self.path):
-            with open(self.path) as f:
-                self._data = json.load(f)
+        self._mtime_ns: Optional[int] = None
+        self.reload()
+
+    def _stat_ns(self) -> Optional[int]:
+        try:
+            return os.stat(self.path).st_mtime_ns
+        except OSError:
+            return None
+
+    def reload(self) -> None:
+        """Re-read the registry file, replacing in-memory state. A missing
+        file is an empty registry, not an error."""
+        with _LOCK:
+            mtime = self._stat_ns()
+            data: Dict[str, Dict[str, dict]] = {}
+            if mtime is not None:
+                with open(self.path) as f:
+                    data = json.load(f)
+            self._data = data
+            self._mtime_ns = mtime
+
+    def maybe_reload(self) -> bool:
+        """Reload iff the file changed on disk since we last read or wrote
+        it. This is how serving reader processes observe the writer hub's
+        `save()`s: an mtime check per cache miss, a re-parse only when the
+        file really moved. Returns True when a reload happened."""
+        if self._stat_ns() == self._mtime_ns:
+            return False
+        self.reload()
+        return True
 
     def _put_unlocked(self, device: str, wl: Workload, cfg: ProgramConfig,
                       throughput: float):
@@ -65,6 +92,7 @@ class Registry:
             with open(tmp, "w") as f:
                 json.dump(self._data, f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)
+            self._mtime_ns = self._stat_ns()
 
     def ingest(self, result) -> None:
         """Ingest a TuneResult, keeping the better config on key collisions

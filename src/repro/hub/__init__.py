@@ -3,29 +3,62 @@
 Sits between the simulator/dataset layer and the tuning stack:
 
   store.py        append-only on-disk record store (JSONL shards keyed by
-                  device/task; schema-versioned, deduplicated, atomic writes)
+                  device/task; schema-versioned, deduplicated, atomic writes,
+                  byte-offset sidecar indexes for the serving read path)
   fingerprint.py  micro-probe suite -> normalized device fingerprint vector
                   + similarity metric
   transfer.py     source-selection policy: rank known devices by fingerprint
                   similarity, assemble a mixed weighted source pool +
                   pretrained cost-model params for an unseen target
   service.py      TuningHub facade: get_config(device, workload) serves from
-                  the tuned-config Registry on hit and schedules batched
-                  TuneSession jobs on miss (in-flight dedup, writeback of
-                  winners and of every new measurement into the store)
-"""
-from repro.hub.fingerprint import (PROBE_VERSION, device_fingerprint,
-                                   fingerprint_similarity, probe_suite,
-                                   rank_by_similarity)
-from repro.hub.service import HubResponse, HubStats, TuningHub
-from repro.hub.store import (SCHEMA_VERSION, RecordStore, StoreSchemaError,
-                             workload_from_record)
-from repro.hub.transfer import SourceSelection, bootstrap_store, select_sources
+                  the tuned-config LRU cache / Registry on hit and schedules
+                  batched TuneSession jobs on miss (in-flight dedup,
+                  writeback of winners and of every new measurement)
+  serving/        production front end: indexed reads, tuned-config cache,
+                  and the multi-process socket RPC server + client
 
-__all__ = [
-    "SCHEMA_VERSION", "RecordStore", "StoreSchemaError",
-    "workload_from_record", "PROBE_VERSION", "probe_suite",
-    "device_fingerprint", "fingerprint_similarity", "rank_by_similarity",
-    "SourceSelection", "select_sources", "bootstrap_store",
-    "TuningHub", "HubResponse", "HubStats",
-]
+Exports resolve lazily (PEP 562): serving clients and spawned reader
+processes import `repro.hub.store` / `repro.hub.serving.*` without paying
+for the tuning stack (`service.py` pulls in jax) they never call.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "SCHEMA_VERSION": "repro.hub.store",
+    "RecordStore": "repro.hub.store",
+    "StoreSchemaError": "repro.hub.store",
+    "workload_from_record": "repro.hub.store",
+    "PROBE_VERSION": "repro.hub.fingerprint",
+    "probe_suite": "repro.hub.fingerprint",
+    "device_fingerprint": "repro.hub.fingerprint",
+    "fingerprint_similarity": "repro.hub.fingerprint",
+    "rank_by_similarity": "repro.hub.fingerprint",
+    "SourceSelection": "repro.hub.transfer",
+    "select_sources": "repro.hub.transfer",
+    "bootstrap_store": "repro.hub.transfer",
+    "TuningHub": "repro.hub.service",
+    "HubResponse": "repro.hub.service",
+    "HubStats": "repro.hub.service",
+    "HubServer": "repro.hub.serving.server",
+    "HubClient": "repro.hub.serving.client",
+    "ServeResult": "repro.hub.serving.client",
+    "TunedConfigCache": "repro.hub.serving.cache",
+    "LatencyWindow": "repro.hub.serving.cache",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(target), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

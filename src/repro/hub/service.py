@@ -27,6 +27,7 @@ import dataclasses
 import os
 import sys
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
@@ -39,6 +40,7 @@ from repro.configs.moses import DEFAULT as DEFAULT_CFG
 from repro.configs.moses import MosesConfig
 from repro.core.cost_model import resolve_cost_model
 from repro.hub.fingerprint import device_fingerprint
+from repro.hub.serving.cache import LatencyWindow, TunedConfigCache
 from repro.hub.store import RecordStore
 from repro.hub.transfer import SourceSelection, select_sources
 
@@ -46,6 +48,7 @@ from repro.hub.transfer import SourceSelection, select_sources
 @dataclasses.dataclass
 class HubStats:
     hits: int = 0
+    cache_hits: int = 0      # hits answered by the LRU (zero I/O; subset)
     misses: int = 0
     jobs: int = 0            # batched TuneSession jobs run
     dedup_skips: int = 0     # requests already pending/in-flight
@@ -65,6 +68,7 @@ class HubResponse:
     throughput_gflops: Optional[float]       # registry's recorded winner
     new_measurements: int                    # 0 on a hit
     sources: List[Tuple[str, float]]         # (source device, weight); [] hit
+    source: str = ""                         # "cache"|"registry"|"tuned"|...
 
 
 class TuningHub:
@@ -90,7 +94,8 @@ class TuningHub:
                  executor=None,
                  refresh: str = "off",
                  lifecycle=None,
-                 lifecycle_cfg=None):
+                 lifecycle_cfg=None,
+                 cache_size: int = 512):
         self.root = root
         self.moses_cfg = moses_cfg
         self.store = store if store is not None else RecordStore(
@@ -120,7 +125,15 @@ class TuningHub:
         self._lifecycle = lifecycle
         self._lifecycle_cfg = lifecycle_cfg
         self.stats = HubStats()
-        self._lock = threading.RLock()          # hub state (queues, stats)
+        # served-winner LRU + latency windows: the fine-grained read path.
+        # A hit touches ONLY these (each has its own lock) — never the hub
+        # lock, the device job locks, or the store — so reads cannot
+        # serialize behind an in-flight tuning job (regression-tested).
+        self.config_cache = TunedConfigCache(cache_size)
+        self.hit_latency = LatencyWindow()
+        self.miss_latency = LatencyWindow()
+        self._stats_lock = threading.Lock()     # HubStats counters only
+        self._lock = threading.RLock()          # hub state (queues)
         self._dev_locks: Dict[str, threading.Lock] = {}  # one job per device
         self._pending: Dict[str, Dict[str, Workload]] = {}
         self._inflight: Set[Tuple[str, str]] = set()
@@ -140,7 +153,8 @@ class TuningHub:
             key = wl.key()
             if (key in self._pending.get(device, {})
                     or (device, key) in self._inflight):
-                self.stats.dedup_skips += 1
+                with self._stats_lock:
+                    self.stats.dedup_skips += 1
                 return False
             self._pending.setdefault(device, {})[key] = wl
             return True
@@ -166,23 +180,43 @@ class TuningHub:
                    flush: bool = True) -> HubResponse:
         """Serve the best known config for (device, workload).
 
-        Registry hit: answered immediately, zero measurements. Miss: the
-        workload is queued and (with `flush=True`, the default) tuned now in
-        one batched job together with everything else pending for the
-        device; `flush=False` just queues (prefetch) and serves the vendor
-        default until a later flush lands."""
-        with self._lock:
-            entry = self.registry.lookup(device, wl)
-            if entry is not None:
+        Hit path (LRU cache, then registry): answered immediately, zero
+        measurements — and WITHOUT the hub lock. The cache and the stats
+        counters each have their own fine-grained lock, so a slow tuning
+        job in flight for the same device never serializes pure reads
+        behind it (regression-tested). Miss: the workload is queued and
+        (with `flush=True`, the default) tuned now in one batched job
+        together with everything else pending for the device;
+        `flush=False` just queues (prefetch) and serves the vendor default
+        until a later flush lands."""
+        t0 = time.perf_counter()
+        key = wl.key()
+        cached = self.config_cache.get(device, key)
+        if cached is not None:
+            cfg, thr = cached
+            with self._stats_lock:
                 self.stats.hits += 1
-                return HubResponse(device, wl, self.registry.get(device, wl),
-                                   True, entry.get("throughput_gflops"),
-                                   0, [])
+                self.stats.cache_hits += 1
+            self.hit_latency.record(time.perf_counter() - t0)
+            return HubResponse(device, wl, cfg, True, thr, 0, [],
+                               source="cache")
+        entry = self.registry.lookup(device, wl)
+        if entry is not None:
+            cfg = self.registry.get(device, wl)
+            thr = entry.get("throughput_gflops")
+            self.config_cache.put(device, key, cfg, thr)
+            with self._stats_lock:
+                self.stats.hits += 1
+            self.hit_latency.record(time.perf_counter() - t0)
+            return HubResponse(device, wl, cfg, True, thr, 0, [],
+                               source="registry")
+        with self._stats_lock:
             self.stats.misses += 1
-            self.request(device, wl)
-            if not flush:
-                return HubResponse(device, wl, self.registry.get(device, wl),
-                                   False, None, 0, [])
+        self.request(device, wl)
+        if not flush:
+            self.miss_latency.record(time.perf_counter() - t0)
+            return HubResponse(device, wl, self.registry.get(device, wl),
+                               False, None, 0, [], source="default")
         # tune outside the hub lock: hits for other (device, workload)s keep
         # being served while this job runs. If another thread is already
         # tuning this key (it was in flight above), flush() blocks on the
@@ -192,10 +226,12 @@ class TuningHub:
         with self._lock:
             entry = self.registry.lookup(device, wl) or {}
             sel = self._selections.get(device)
+            self.miss_latency.record(time.perf_counter() - t0)
             return HubResponse(device, wl, self.registry.get(device, wl),
                                False, entry.get("throughput_gflops"),
                                sum(r.total_measurements for r in results),
-                               sel.sources if sel is not None else [])
+                               sel.sources if sel is not None else [],
+                               source="tuned")
 
     def _device_lock(self, device: str) -> threading.Lock:
         with self._lock:
@@ -229,6 +265,11 @@ class TuningHub:
                 try:
                     results.append(self._tune_batch(dev, tasks))
                 finally:
+                    # registry write hook: whatever the job landed (or
+                    # failed to land), cached winners for this device are
+                    # suspect — drop them; the next read repopulates from
+                    # the registry
+                    self.config_cache.invalidate(dev)
                     with self._lock:
                         self._inflight -= keys
         return results
@@ -311,7 +352,7 @@ class TuningHub:
         except Exception as e:  # noqa: BLE001 — a daemon thread must not
             # die silently: surface the failure in the stats the smoke and
             # --stats read, not just a stderr traceback
-            with self._lock:
+            with self._stats_lock:
                 self.stats.refresh_rejects += 1
             print(f"[hub] continual refresh({device}) failed: {e!r}",
                   file=sys.stderr)
@@ -320,14 +361,19 @@ class TuningHub:
             if result is None:
                 return
             if result.accepted:
-                self.stats.refreshes += 1
+                with self._stats_lock:
+                    self.stats.refreshes += 1
+                # lifecycle hook: a refreshed serving model can change what
+                # future jobs land, so cached winners for the device go too
+                self.config_cache.invalidate(device)
                 # selections that warm-started from this device's params now
                 # point at a superseded version; recompute on next miss
                 for target in [t for t, sel in self._selections.items()
                                if sel.params_device == device]:
                     del self._selections[target]
             else:
-                self.stats.refresh_rejects += 1
+                with self._stats_lock:
+                    self.stats.refresh_rejects += 1
 
     def _schedule_refresh(self, device: str) -> None:
         """Post-job continual-learning hook: check drift on the device that
@@ -380,10 +426,11 @@ class TuningHub:
                                       executor=self.executor)[0]
         else:
             result = session.run(tasks, device, strategy)
-        self.stats.jobs += 1
-        self.stats.measurements += result.total_measurements
-        self.stats.poisoned += sum(len(t.poisoned or [])
-                                   for t in result.tasks)
+        with self._stats_lock:
+            self.stats.jobs += 1
+            self.stats.measurements += result.total_measurements
+            self.stats.poisoned += sum(len(t.poisoned or [])
+                                       for t in result.tasks)
         self.registry.save()
         self.store.flush()
         if self.refresh != "off":

@@ -1,0 +1,48 @@
+"""Hub serving subsystem: the production read path for tuned configs.
+
+  index.py     byte-offset sidecar indexes over the JSONL record shards
+  cache.py     tuned-config LRU + latency windows (the zero-I/O hit path)
+  protocol.py  length-prefixed JSON socket framing + wire forms
+  server.py    spawn-based multi-process front end: N read-only reader
+               processes, tune-on-miss funneled to the single writer hub
+  client.py    socket client with endpoint discovery and reader failover
+
+Submodules resolve lazily (PEP 562): `store.py` imports `serving.index`,
+while `serving.server` imports the store back — eager package imports would
+cycle, and read-only client/reader processes should not pay for modules
+they never touch.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "ShardIndex": "repro.hub.serving.index",
+    "build_index": "repro.hub.serving.index",
+    "load_index": "repro.hub.serving.index",
+    "write_index": "repro.hub.serving.index",
+    "read_rows": "repro.hub.serving.index",
+    "TunedConfigCache": "repro.hub.serving.cache",
+    "LatencyWindow": "repro.hub.serving.cache",
+    "ProtocolError": "repro.hub.serving.protocol",
+    "send_frame": "repro.hub.serving.protocol",
+    "recv_frame": "repro.hub.serving.protocol",
+    "HubServer": "repro.hub.serving.server",
+    "HubClient": "repro.hub.serving.client",
+    "ServeResult": "repro.hub.serving.client",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(target), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -24,14 +24,17 @@ import json
 import os
 import re
 import threading
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Any, Dict, Iterable, List, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
 from repro.autotune.space import ProgramConfig, Workload
-from repro.core.cost_model import (Records, load_params, normalize_per_task,
-                                   save_params)
-from repro.core.features import FEATURE_DIM, extract_features
+from repro.hub.serving import index as shard_index_mod
+
+if TYPE_CHECKING:       # the featurized-Records type only; the cost-model
+    from repro.core.cost_model import Records     # module itself (and jax)
+    # loads lazily so read-only serving processes boot without it
 
 SCHEMA_VERSION = 1
 
@@ -126,6 +129,10 @@ class RecordStore:
         # each shard once until it changes on disk
         self._shard_cache: Dict[str, Tuple[Tuple[int, int],
                                            List[Dict[str, Any]]]] = {}
+        # path -> ShardIndex (stamp-checked like _shard_cache): the serving
+        # read path (count / task_keys / best_record / tail_rows) answers
+        # from sidecar indexes without re-parsing shard records
+        self._idx_cache: Dict[str, "shard_index_mod.ShardIndex"] = {}
 
     # --- paths ------------------------------------------------------------
     def _records_dir(self, device: str) -> str:
@@ -148,6 +155,71 @@ class RecordStore:
         with self._lock:
             self._shard_cache[path] = (stamp, recs)
         return recs
+
+    # --- byte-offset shard indexes ----------------------------------------
+    def _shard_index(self, path: str):
+        """The (memory-cached, sidecar-persisted) index for one shard file;
+        None when the shard does not exist. A stale or schema-mismatched
+        sidecar is rebuilt from the shard and rewritten — sidecars are
+        derived data and always self-invalidate via the shard stamp."""
+        try:
+            st = os.stat(path)
+        except OSError:
+            return None
+        stamp = (st.st_mtime_ns, st.st_size)
+        with self._lock:
+            hit = self._idx_cache.get(path)
+            if hit is not None and hit.stamp == stamp:
+                return hit
+        idx = shard_index_mod.load_index(path, stamp)
+        if idx is None:
+            idx = shard_index_mod.build_index(path)
+            if idx is None:
+                return None
+            try:
+                shard_index_mod.write_index(path, idx)
+            except OSError:
+                pass        # read-only corpus: serve from memory only
+        with self._lock:
+            self._idx_cache[path] = idx
+        return idx
+
+    def shard_index(self, device: str, task_key: str):
+        """Public index handle for one (device, task) shard, or None."""
+        return self._shard_index(self._shard_path(device, task_key))
+
+    def _buffered(self, device: str,
+                  task_key: Optional[str] = None) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [r for (d, k), recs in sorted(self._buffer.items())
+                    if d == device and (task_key is None or k == task_key)
+                    for r in recs]
+
+    def best_record(self, device: str,
+                    task_key: str) -> Optional[Dict[str, Any]]:
+        """The highest-throughput good record for (device, task) — persisted
+        winner straight from the sidecar index (no shard parse), merged with
+        any still-buffered records. The serving fallback when the registry
+        has no tuned winner yet."""
+        idx = self.shard_index(device, task_key)
+        best = idx.best(task_key) if idx is not None else None
+        for rec in self._buffered(device, task_key):
+            if rec.get("error") or rec.get("throughput_gflops") is None:
+                continue
+            if shard_index_mod._better(best, rec):
+                best = rec
+        return best
+
+    def tail_rows(self, device: str, task_key: str,
+                  n: int) -> List[Dict[str, Any]]:
+        """The newest `n` persisted records of one shard, seek-read via the
+        byte-offset index — O(n) bytes touched, not O(shard)."""
+        path = self._shard_path(device, task_key)
+        idx = self._shard_index(path)
+        if idx is None or n <= 0:
+            return []
+        return shard_index_mod.read_rows(path, idx,
+                                         max(0, len(idx.rows) - n))
 
     # --- writes -----------------------------------------------------------
     def _ensure_index(self, device: str, task_key: str) -> set:
@@ -211,14 +283,36 @@ class RecordStore:
                 path = self._shard_path(device, task_key)
                 existing = self._load_shard_cached(path)
                 os.makedirs(os.path.dirname(path), exist_ok=True)
-                tmp = path + ".tmp"
-                with open(tmp, "w") as f:
-                    for rec in existing + pending:
-                        f.write(json.dumps(rec, sort_keys=True) + "\n")
-                os.replace(tmp, path)
+                self._rewrite_shard(path, existing + pending)
                 written += len(pending)
             self._buffer.clear()
             return written
+
+    def _rewrite_shard(self, path: str,
+                       records: List[Dict[str, Any]]) -> None:
+        """Write `records` as the shard's new full contents (temp file +
+        `os.replace`), then refresh its sidecar index and in-memory caches.
+        The sidecar lands AFTER the shard: a reader between the two replaces
+        sees a stamp mismatch and rebuilds — never a torn index. Lock held
+        by the caller."""
+        tmp = path + ".tmp"
+        rows: List[Tuple[int, int]] = []
+        with open(tmp, "wb") as f:
+            for rec in records:
+                line = json.dumps(rec, sort_keys=True).encode()
+                rows.append((f.tell(), len(line)))
+                f.write(line + b"\n")
+        os.replace(tmp, path)
+        st = os.stat(path)
+        stamp = (st.st_mtime_ns, st.st_size)
+        idx = shard_index_mod.index_records(records, stamp, rows)
+        try:
+            shard_index_mod.write_index(path, idx)
+        except OSError:
+            self._idx_cache.pop(path, None)
+        else:
+            self._idx_cache[path] = idx
+        self._shard_cache[path] = (stamp, records)
 
     # --- reads ------------------------------------------------------------
     def devices(self) -> List[str]:
@@ -230,31 +324,58 @@ class RecordStore:
                         if os.path.isdir(os.path.join(rec_root, d)))
         return sorted(devs)
 
-    def _iter_persisted(self, device: str):
+    def _shard_files(self, device: str,
+                     task_keys: Optional[Sequence[str]] = None) -> List[str]:
+        """Shard paths for a device, optionally narrowed to the files that
+        can hold `task_keys` (shards are keyed by task, so a task filter is
+        a filename filter — readers skip unrelated shards entirely)."""
         d = self._records_dir(device)
         if not os.path.isdir(d):
-            return
-        for name in sorted(os.listdir(d)):
-            if name.endswith(".jsonl"):
-                yield from self._load_shard_cached(os.path.join(d, name))
+            return []
+        names = [n for n in sorted(os.listdir(d)) if n.endswith(".jsonl")]
+        if task_keys is not None:
+            wanted = {_shard_name(k) for k in task_keys}
+            names = [n for n in names if n in wanted]
+        return [os.path.join(d, n) for n in names]
+
+    def _iter_persisted(self, device: str,
+                        task_keys: Optional[Sequence[str]] = None):
+        for path in self._shard_files(device, task_keys):
+            yield from self._load_shard_cached(path)
 
     def iter_device(self, device: str, include_errors: bool = False):
         """All records for a device: persisted shards, then buffered.
         Error (poisoned-measurement) records are skipped by default so
         every training/featurization reader sees only real throughputs."""
-        for rec in self._iter_persisted(device):
+        yield from self._iter_records(device, None,
+                                      include_errors=include_errors)
+
+    def _iter_records(self, device: str,
+                      task_keys: Optional[Sequence[str]] = None,
+                      include_errors: bool = False):
+        for rec in self._iter_persisted(device, task_keys):
             if include_errors or not rec.get("error"):
                 yield rec
         with self._lock:
-            pending = [r for (d, _), recs in sorted(self._buffer.items())
-                       if d == device for r in recs]
+            keys = set(task_keys) if task_keys is not None else None
+            pending = [r for (d, k), recs in sorted(self._buffer.items())
+                       if d == device and (keys is None or k in keys)
+                       for r in recs]
         for rec in pending:
             if include_errors or not rec.get("error"):
                 yield rec
 
     def count(self, device: str, include_errors: bool = False) -> int:
-        return sum(1 for _ in self.iter_device(
-            device, include_errors=include_errors))
+        """Record count for a device, answered from the sidecar indexes
+        (plus the in-memory buffer) — no shard re-parse on the hot path.
+        Schema errors surface exactly as they would from `iter_device`."""
+        n = 0
+        for path in self._shard_files(device):
+            idx = self._shard_index(path)
+            if idx is not None:
+                n += idx.n_records if include_errors else idx.n_good
+        return n + sum(1 for r in self._buffered(device)
+                       if include_errors or not r.get("error"))
 
     def error_records(self, device: str) -> List[Dict[str, Any]]:
         """Just the poisoned measurements for a device (diagnostics)."""
@@ -262,21 +383,32 @@ class RecordStore:
                 if r.get("error")]
 
     def task_keys(self, device: str) -> List[str]:
-        return sorted({workload_from_record(r).key()
-                       for r in self.iter_device(device)})
+        keys = set()
+        for path in self._shard_files(device):
+            idx = self._shard_index(path)
+            if idx is not None:
+                keys.update(idx.task_keys())
+        keys.update(workload_from_record(r).key()
+                    for r in self._buffered(device) if not r.get("error"))
+        return sorted(keys)
 
     def records(self, device: str,
-                task_keys: Optional[Sequence[str]] = None) -> Records:
+                task_keys: Optional[Sequence[str]] = None) -> "Records":
         """Materialize a device's corpus as a featurized `Records` set.
 
         Group ids index task keys within this device (per-task label
         normalization is per device here; cross-device pools must offset
-        group ids — see `transfer.select_sources`).
+        group ids — see `transfer.select_sources`). With `task_keys`, only
+        the matching shard files are parsed at all (shards are keyed by
+        task); the in-record key filter stays as the correctness backstop
+        for externally merged shards.
         """
+        from repro.core.cost_model import Records, normalize_per_task
+        from repro.core.features import FEATURE_DIM, extract_features
         wanted = set(task_keys) if task_keys is not None else None
         feats, raw, gids = [], [], []
         gid_of: Dict[str, int] = {}
-        for rec in self.iter_device(device):
+        for rec in self._iter_records(device, task_keys):
             wl = workload_from_record(rec)
             key = wl.key()
             if wanted is not None and key not in wanted:
@@ -346,21 +478,18 @@ class RecordStore:
         appending to the same root, or shards merged with `cat`, can land
         duplicates on disk. Buffered records flush first so the rewrite
         sees everything; each rewritten shard goes through the same
-        temp-file + `os.replace` discipline as `flush()`, so a crash
-        mid-compact never corrupts a shard (torn-line-survives is
+        temp-file + `os.replace` discipline as `flush()` — and
+        `_rewrite_shard` refreshes the byte-offset sidecar with the shard,
+        so a crash mid-compact never corrupts a shard and a concurrent
+        reader only ever sees a stamp-consistent (shard, index) pair
+        (torn-line-survives and compact-under-reader are both
         regression-tested)."""
         with self._lock:
             self.flush()
             dropped = 0
             devices = [device] if device is not None else self.devices()
             for dev in devices:
-                d = self._records_dir(dev)
-                if not os.path.isdir(d):
-                    continue
-                for name in sorted(os.listdir(d)):
-                    if not name.endswith(".jsonl"):
-                        continue
-                    path = os.path.join(d, name)
+                for path in self._shard_files(dev):
                     with open(path) as f:
                         n_lines = sum(1 for ln in f if ln.strip())
                     recs = _load_shard_file(path)
@@ -372,15 +501,13 @@ class RecordStore:
                         seen.add(dk)
                         kept.append(rec)
                     if len(kept) == n_lines:
+                        # nothing to drop, but make sure the sidecar exists
+                        # and is fresh for the serving read path
+                        self._shard_index(path)
                         continue
-                    tmp = path + ".tmp"
-                    with open(tmp, "w") as f:
-                        for rec in kept:
-                            f.write(json.dumps(rec, sort_keys=True) + "\n")
-                    os.replace(tmp, path)
+                    self._rewrite_shard(path, kept)
                     dropped += n_lines - len(kept)
-                    # rewritten on disk: drop stale cache + index entries
-                    self._shard_cache.pop(path, None)
+                    # the dedup index keyed on (device, task) is stale too
                     task_key = next((k for (dv, k) in self._index
                                      if dv == dev and
                                      self._shard_path(dv, k) == path), None)
@@ -424,6 +551,7 @@ class RecordStore:
                     f"{path} has schema {data.get('schema')!r}")
             entries = list(data.get("versions", []))
         elif os.path.exists(self._params_path(device)):
+            from repro.core.cost_model import load_params
             _, meta = load_params(self._params_path(device))
             entries = [{"version": 0, "parent": None,
                         "model": meta.get("model"), "trigger": "legacy",
@@ -461,6 +589,7 @@ class RecordStore:
         lifecycle manager records records-seen watermark, drift trigger,
         rank-accuracy and parameter distance here). Returns the .npz path.
         """
+        from repro.core.cost_model import save_params
         with self._lock:
             entries = self.model_lineage(device)
             version = (max(int(e["version"]) for e in entries) + 1
@@ -510,6 +639,7 @@ class RecordStore:
                 path = os.path.join(self._params_dir(device), e["path"])
             if not os.path.exists(path):
                 continue
+            from repro.core.cost_model import load_params
             params, _meta = load_params(path)
             return params
         return None

@@ -1,6 +1,9 @@
 """Transfer-hub launcher: serve, inspect, and smoke-test the TuningHub.
 
     PYTHONPATH=src python -m repro.launch.hub --smoke [--refresh] [--root DIR]
+    PYTHONPATH=src python -m repro.launch.hub --smoke --serve [--readers N]
+    PYTHONPATH=src python -m repro.launch.hub --serve [--readers N] \
+        [--clients N] [--serve-seconds S]
     PYTHONPATH=src python -m repro.launch.hub --stats [--root DIR]
     PYTHONPATH=src python -m repro.launch.hub --lineage [--device DEV]
     PYTHONPATH=src python -m repro.launch.hub --compact
@@ -18,6 +21,14 @@ simply a hit too. Exits non-zero if any serving invariant fails.
 same tiny store: background auto-refresh after the serving job, then a
 forced lifecycle refresh whose accepted version must land in the store's
 lineage (and whose held-out rank-accuracy guard must hold).
+
+--smoke --serve is the hub-serving CI leg: the same tiny store, fronted by
+the multi-process `HubServer` — a client's first query funnels tune-on-miss
+to the writer hub, the repeat query must be a reader cache hit serving
+identical knobs, and a second client on another reader must see the same
+winner from the registry. --serve alone runs a long-lived server (with
+`--clients N`, N spawned load-generator processes hammer it first and
+report QPS).
 """
 from __future__ import annotations
 
@@ -138,6 +149,139 @@ def run_refresh_smoke(hub, target: str) -> int:
     return 0
 
 
+def run_serve_smoke(root: str, readers: int = 2) -> int:
+    """The hub-serving CI leg: boot the multi-process front end over a tiny
+    store and prove the serving invariants end to end — tune-on-miss funnels
+    to the one writer hub, repeat queries are reader cache hits, and every
+    reader serves the same winner."""
+    from repro.hub import HubClient, HubServer, TuningHub, bootstrap_store
+
+    t0 = time.time()
+    hub = TuningHub(root, moses_cfg=_smoke_cfg(), trials_per_task=16,
+                    pretrain_epochs=4)
+    boot = bootstrap_store(hub.store, ("tpu_v5e", "tpu_edge"),
+                           _smoke_tasks(), programs_per_task=16)
+    print(f"[serve-smoke] store at {hub.store.root}: {boot} new bootstrap "
+          f"records; devices={hub.store.devices()}")
+
+    target = "tpu_v5e_pro"
+    wl = _smoke_tasks()[0]
+    with HubServer(root, hub=hub, readers=readers) as srv:
+        print(f"[serve-smoke] {readers} reader(s) up: {srv.endpoints()}; "
+              f"writer port {srv.writer_port}")
+        with HubClient(root=root) as c:
+            assert c.ping(), "reader did not answer ping"
+            r1 = c.get_config(target, wl)
+            print(f"[serve-smoke] first  get_config({target}, {wl.key()}): "
+                  f"source={r1.source} rid={r1.rid} "
+                  f"{r1.latency_s * 1e3:.1f}ms")
+            assert r1.source in ("tuned", "registry", "cache"), (
+                f"first query served from {r1.source!r}; the miss funnel "
+                "should have tuned it (or a warm root should hit)")
+            r2 = c.get_config(target, wl)
+            print(f"[serve-smoke] second get_config: source={r2.source} "
+                  f"rid={r2.rid} {r2.latency_s * 1e3:.1f}ms")
+            assert r2.source == "cache" and r2.cache_hit, (
+                f"repeat query on the same reader must be a cache hit, "
+                f"got {r2.source!r}")
+            assert r2.config.knobs == r1.config.knobs, (
+                "cache hit served different knobs than the tuned winner")
+        # a client on ANOTHER reader: fresh LRU, must still see the same
+        # winner via the shared registry file
+        with HubClient(root=root, offset=1) as c2:
+            r3 = c2.get_config(target, wl)
+            print(f"[serve-smoke] other-reader get_config: "
+                  f"source={r3.source} rid={r3.rid}")
+            assert r3.config.knobs == r1.config.knobs, (
+                "second reader served a different winner")
+            if readers > 1 and r3.rid != r1.rid:
+                assert r3.source in ("registry", "cache"), (
+                    f"warm registry should hit, got {r3.source!r}")
+        agg = srv.stats()
+        served = sum(r.get("served", 0) for r in agg["readers"])
+        print(f"[serve-smoke] writer stats: {agg['writer']}; "
+              f"readers served {served} request(s); "
+              f"respawns={agg['respawns']}")
+        assert served >= 3, f"readers report only {served} served requests"
+    print(f"[serve-smoke] OK in {time.time() - t0:.1f}s")
+    return 0
+
+
+def _serve_client_main(root: str, cid: int, seconds: float, out_q) -> None:
+    """Load-generator process for `--serve --clients N` (spawn target):
+    hammer the read path (tune=False) over every known device x smoke task
+    and report (client id, requests completed, errors)."""
+    from repro.hub import HubClient, RecordStore
+    import os
+    store = RecordStore(os.path.join(root, "store"))
+    devices = store.devices() or ["tpu_v5e"]
+    tasks = _smoke_tasks()
+    n = errors = 0
+    deadline = time.time() + seconds
+    with HubClient(root=root, offset=cid) as c:
+        while time.time() < deadline:
+            for dev in devices:
+                for wl in tasks:
+                    try:
+                        c.get_config(dev, wl, tune=False)
+                        n += 1
+                    except (ConnectionError, RuntimeError):
+                        errors += 1
+    out_q.put((cid, n, errors))
+
+
+def run_serve(root: str, readers: int = 2, clients: int = 0,
+              seconds: float = 10.0) -> int:
+    """Run the serving front end: forever (Ctrl-C to stop) when
+    `clients == 0`, else for `seconds` while `clients` spawned load
+    generators hammer it, reporting aggregate QPS."""
+    import multiprocessing as mp
+
+    from repro.hub import HubServer
+    from repro.hub.serving.server import endpoints_path
+
+    with HubServer(root, readers=readers) as srv:
+        print(f"[serve] {readers} reader(s) up: {srv.endpoints()}")
+        print(f"[serve] endpoints file: {endpoints_path(root)}")
+        if clients <= 0:
+            print("[serve] serving until interrupted (Ctrl-C)")
+            try:
+                while True:
+                    time.sleep(3600)
+            except KeyboardInterrupt:
+                print("[serve] interrupted; shutting down")
+                return 0
+        ctx = mp.get_context("spawn")
+        out_q = ctx.Queue()
+        procs = [ctx.Process(target=_serve_client_main,
+                             args=(root, cid, seconds, out_q), daemon=True)
+                 for cid in range(clients)]
+        t0 = time.time()
+        for p in procs:
+            p.start()
+        total = errors = 0
+        for _ in procs:
+            cid, n, err = out_q.get(timeout=seconds + 120)
+            total += n
+            errors += err
+            print(f"[serve] client {cid}: {n} request(s), {err} error(s)")
+        for p in procs:
+            p.join(10.0)
+        elapsed = time.time() - t0
+        agg = srv.stats()
+        for r in agg["readers"]:
+            hit, miss = r.get("hit", {}), r.get("miss", {})
+            print(f"[serve] reader {r.get('rid')}: served={r.get('served')} "
+                  f"hit p50={hit.get('p50_ms', float('nan')):.2f}ms "
+                  f"p99={hit.get('p99_ms', float('nan')):.2f}ms "
+                  f"miss p50={miss.get('p50_ms', float('nan')):.2f}ms "
+                  f"p99={miss.get('p99_ms', float('nan')):.2f}ms")
+        print(f"[serve] {clients} client(s) x {seconds:.0f}s: {total} "
+              f"request(s), {errors} error(s), "
+              f"{total / max(elapsed, 1e-9):.0f} QPS")
+        return 1 if errors else 0
+
+
 def print_stats(root: str, hub=None, drift: bool = True) -> int:
     """Store statistics + the serving queue + per-device drift columns.
 
@@ -177,7 +321,60 @@ def print_stats(root: str, hub=None, drift: bool = True) -> int:
           f"scheduler={hub.scheduler} refresh={hub.refresh}")
     for d, n in per_dev.items():
         print(f"  {d:14s} {n:6d} pending")
+    _print_serving_stats(root, hub)
     return 0
+
+
+def _fmt_ms(v) -> str:
+    return "-" if v is None or math.isnan(v) else f"{v:.2f}"
+
+
+def _print_serving_stats(root: str, hub) -> None:
+    """The serving columns of `--stats`: this hub's cache hit-rate and
+    hit/miss latency percentiles, plus — when a live server has published
+    `endpoints.json` under `root` — the same columns per reader process,
+    queried over the serving RPC."""
+    cc = hub.config_cache.counters()
+    rate = cc["hit_rate"]
+    print(f"serving cache: size={cc['size']} hits={cc['hits']} "
+          f"misses={cc['misses']} "
+          f"hit-rate={'-' if math.isnan(rate) else format(rate, '.3f')} "
+          f"(cache-hits served: {hub.stats.cache_hits})")
+    hs, ms = hub.hit_latency.summary(), hub.miss_latency.summary()
+    print(f"  {'path':8s} {'n':>6s} {'p50-ms':>8s} {'p99-ms':>8s}")
+    print(f"  {'hit':8s} {hs['n']:6d} {_fmt_ms(hs['p50_ms']):>8s} "
+          f"{_fmt_ms(hs['p99_ms']):>8s}")
+    print(f"  {'miss':8s} {ms['n']:6d} {_fmt_ms(ms['p50_ms']):>8s} "
+          f"{_fmt_ms(ms['p99_ms']):>8s}")
+    import os
+
+    from repro.hub.serving.server import endpoints_path
+    if not os.path.exists(endpoints_path(root)):
+        return
+    from repro.hub import HubClient
+    try:
+        with HubClient(root=root) as c:
+            eps = list(c._endpoints)
+    except (OSError, ValueError):
+        return
+    print(f"live readers ({len(eps)} endpoint(s)):")
+    print(f"  {'rid':>4s} {'served':>7s} {'hit-rate':>8s} "
+          f"{'hit-p50':>8s} {'hit-p99':>8s} {'miss-p50':>9s} "
+          f"{'miss-p99':>9s}")
+    for i, ep in enumerate(eps):
+        try:
+            with HubClient(root=root, endpoints=[ep], offset=0) as c:
+                st = c.stats()
+        except (ConnectionError, OSError):
+            print(f"  {ep.get('rid', '?'):>4} unreachable")
+            continue
+        cache, hit, miss = st["cache"], st["hit"], st["miss"]
+        r = cache["hit_rate"]
+        print(f"  {st['rid']:4d} {st['served']:7d} "
+              f"{'-' if math.isnan(r) else format(r, '.3f'):>8s} "
+              f"{_fmt_ms(hit['p50_ms']):>8s} {_fmt_ms(hit['p99_ms']):>8s} "
+              f"{_fmt_ms(miss['p50_ms']):>9s} "
+              f"{_fmt_ms(miss['p99_ms']):>9s}")
 
 
 def print_lineage(root: str, device=None) -> int:
@@ -217,6 +414,16 @@ def main():
                     help="hub root (store + registry + params)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-budget end-to-end serving check (CI leg)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the multi-process serving front end (with "
+                         "--smoke: the hub-serving CI leg)")
+    ap.add_argument("--readers", type=int, default=2,
+                    help="reader processes for --serve (default 2)")
+    ap.add_argument("--clients", type=int, default=0,
+                    help="with --serve: spawn N load-generator client "
+                         "processes, report QPS, and exit")
+    ap.add_argument("--serve-seconds", type=float, default=10.0,
+                    help="with --serve --clients: hammer duration")
     ap.add_argument("--stats", action="store_true",
                     help="print record-store statistics (+ drift columns) "
                          "and exit")
@@ -242,8 +449,13 @@ def main():
                          "before serving (skips devices that have records)")
     args = ap.parse_args()
 
+    if args.smoke and args.serve:
+        return run_serve_smoke(args.root, readers=args.readers)
     if args.smoke:
         return run_smoke(args.root, refresh=args.refresh)
+    if args.serve:
+        return run_serve(args.root, readers=args.readers,
+                         clients=args.clients, seconds=args.serve_seconds)
     if args.stats:
         return print_stats(args.root)
     if args.lineage:
