@@ -26,7 +26,10 @@ Benchmarks (one per paper table/figure + system-level extras):
 Suites whose runner returns a metrics dict (sched, continual, hub)
 additionally write a standardized ``BENCH_<suite>.json`` at the repo root —
 suite name, per-metric rows, and the PR timestamp passed via --timestamp —
-so the perf trajectory across PRs is machine-readable.
+so the perf trajectory across PRs is machine-readable. Each run is bracketed
+with process-registry snapshots (``repro.obs``), and the telemetry delta the
+suite produced (measure seconds, queue-wait percentiles, outcome/grant
+counts) lands in the payload's ``obs`` section alongside ``wall_seconds``.
 """
 from __future__ import annotations
 
@@ -40,12 +43,46 @@ import traceback
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def write_bench_json(suite: str, metrics: dict, timestamp=None) -> str:
+def obs_delta_summary(before: dict, after: dict) -> dict:
+    """Boil the suite's registry delta (two `snapshot()`s bracketing the
+    run) down to the BENCH-facing telemetry: simulated device-seconds spent
+    measuring, executor queue-wait percentiles, and measurement outcome
+    counts. Empty dict when the suite touched no instrumented path."""
+    from repro.obs.metrics import delta, hist_percentile
+    d = delta(before, after, prefixes=("exec.", "sched."))
+    out: dict = {}
+    meas_s = d["counters"].get("exec.measure_seconds_total")
+    if meas_s:
+        out["measure_seconds_total"] = round(meas_s, 3)
+    outcomes = {k: int(v) for k, v in d["counters"].items()
+                if k.startswith("exec.outcomes")}
+    if outcomes:
+        out["outcomes"] = outcomes
+    for key, st in d["histograms"].items():
+        if not key.startswith("exec.queue_wait_seconds"):
+            continue
+        qw = out.setdefault("queue_wait", {})
+        qw[key] = {"n": st["count"],
+                   "p50_ms": round(hist_percentile(st, 50) * 1e3, 3),
+                   "p99_ms": round(hist_percentile(st, 99) * 1e3, 3)}
+    grants = {k: int(v) for k, v in d["counters"].items()
+              if k.startswith("sched.grants")}
+    if grants:
+        out["grants"] = grants
+    return out
+
+
+def write_bench_json(suite: str, metrics: dict, timestamp=None,
+                     wall_seconds=None, obs=None) -> str:
     """Persist one suite's metrics as BENCH_<suite>.json at the repo root:
-    {suite, timestamp, metrics: [{metric, value}, ...]}."""
+    {suite, timestamp, metrics: [{metric, value}, ...], wall_seconds, obs}."""
     payload = {"suite": suite, "timestamp": timestamp,
                "metrics": [{"metric": k, "value": v}
                            for k, v in sorted(metrics.items())]}
+    if wall_seconds is not None:
+        payload["wall_seconds"] = round(wall_seconds, 3)
+    if obs:
+        payload["obs"] = obs
     path = os.path.join(REPO_ROOT, f"BENCH_{suite}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
@@ -102,16 +139,23 @@ def main() -> None:
         "continual": lambda: continual_bench.run(),
         "hub": lambda: serve_hub_bench.run(),
     }
+    from repro.obs import metrics as obs_metrics
+    registry = obs_metrics.default_registry()
+
     picked = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")
     failures = []
     for name in picked:
         t0 = time.time()
+        before = registry.snapshot()
         print(f"# === {name} ===", flush=True)
         try:
             out = benches[name]()
             if isinstance(out, dict):
-                write_bench_json(name, out, timestamp=args.timestamp)
+                write_bench_json(name, out, timestamp=args.timestamp,
+                                 wall_seconds=time.time() - t0,
+                                 obs=obs_delta_summary(before,
+                                                       registry.snapshot()))
         except Exception as e:
             failures.append(name)
             traceback.print_exc()

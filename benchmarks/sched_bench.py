@@ -112,6 +112,7 @@ def run(trials: int = 48, strategy: str = "tenset-finetune",
     serial_session = default_session(seed=seed, trials=trials)
     serial_results = serial_session.run_many(jobs, strategy=strategy,
                                              scheduler="serial")
+    serial_wall = time.time() - t0
     s_curve = serial_curve(serial_results)
     serial_budget = sum(r.total_search_seconds for r in serial_results)
     serial_meas_budget = s_curve[-1][0]      # pure measurement seconds
@@ -119,7 +120,7 @@ def run(trials: int = 48, strategy: str = "tenset-finetune",
     print(f"[sched] serial: {sum(r.total_measurements for r in serial_results)}"
           f" measurements, {serial_budget:.0f}s simulated "
           f"({serial_meas_budget:.0f}s on-device), final total best latency "
-          f"{serial_final * 1e3:.3f}ms  [{time.time() - t0:.0f}s wall]")
+          f"{serial_final * 1e3:.3f}ms  [{serial_wall:.0f}s wall]")
 
     # --- gradient campaign, same global trial budget, no draft screening
     t0 = time.time()
@@ -132,6 +133,7 @@ def run(trials: int = 48, strategy: str = "tenset-finetune",
     # curve() runs on measurement-only seconds and is closed with the post-
     # finish() point (prediction-only confirmations land there, exactly as
     # the serial replay includes its trial-97 confirmations)
+    gradient_wall = time.time() - t0
     g_curve = campaign.curve()
     match_at = budget_to_reach(g_curve, serial_final)
     frac = match_at / max(serial_meas_budget, 1e-9)
@@ -140,7 +142,7 @@ def run(trials: int = 48, strategy: str = "tenset-finetune",
           f"({campaign.wall_seconds:.0f}s parallel wall), final "
           f"{grad_final * 1e3:.3f}ms; reaches serial final at "
           f"{match_at:.0f}s = {frac * 100:.0f}% of serial budget  "
-          f"[{time.time() - t0:.0f}s wall]")
+          f"[{gradient_wall:.0f}s wall]")
 
     # --- gradient + draft-then-verify, same budget
     t0 = time.time()
@@ -151,6 +153,7 @@ def run(trials: int = 48, strategy: str = "tenset-finetune",
         return_campaign=True)
     spec_final = sum(t.best_latency * t.workload.count
                      for r in spec.results for t in r.tasks)
+    draft_wall = time.time() - t0
     spec_curve = spec.curve()
     st = spec.spec_stats
     quality_gap = spec_final / max(grad_final, 1e-12) - 1.0
@@ -158,7 +161,7 @@ def run(trials: int = 48, strategy: str = "tenset-finetune",
           f"({quality_gap * 100:+.1f}% vs unscreened), full-model rows cut "
           f"{st.full_model_reduction:.1f}x, draft acceptance "
           f"{st.acceptance:.2f} over {st.screened} screened batches  "
-          f"[{time.time() - t0:.0f}s wall]")
+          f"[{draft_wall:.0f}s wall]")
 
     # --- artifacts ---------------------------------------------------------
     os.makedirs(ART, exist_ok=True)
@@ -195,6 +198,11 @@ def run(trials: int = 48, strategy: str = "tenset-finetune",
         "budget_ok": float(budget_ok),
         "draft_ok": float(draft_ok),
         "ok": float(budget_ok and draft_ok),
+        # per-arm wall-clock breakdowns (previously measured for the status
+        # lines but dropped from the BENCH payload)
+        "wall_seconds_serial": round(serial_wall, 3),
+        "wall_seconds_gradient": round(gradient_wall, 3),
+        "wall_seconds_draft": round(draft_wall, 3),
     }
 
 

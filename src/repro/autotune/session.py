@@ -29,6 +29,9 @@ from repro.autotune.tuner import TuneResult, tune
 from repro.configs.moses import DEFAULT as DEFAULT_CFG
 from repro.configs.moses import MosesConfig
 from repro.core.cost_model import CostModel, Records, resolve_cost_model
+from repro.obs import get_logger
+
+log = get_logger("session")
 
 PyTree = Any
 StrategySpec = Union[str, Strategy]
@@ -269,7 +272,7 @@ class TuneSession:
                 for strat in strategies:
                     name = strategy_name(strat)
                     if progress:
-                        print(f"  [{key}] {name} ...", flush=True)
+                        log.info("matrix cell", key=key, strategy=name)
                     out[key][name] = self.run(
                         tasks, device, strat,
                         trials_per_task=trials_per_task, salt=set_name,

@@ -44,6 +44,8 @@ from repro.continual.replay import (ReplayBuffer, ReplayConfig,
                                     build_records, device_rows, split_tail)
 from repro.core.cost_model import (CostModel, param_distance, rank_accuracy,
                                    resolve_cost_model)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 PyTree = Any
 
@@ -235,11 +237,16 @@ class ModelLifecycle:
                                      trigger=trigger)
             self._refreshing.add(device)
         try:
-            result = self._refresh_locked(device, trigger, force,
-                                          rows_by_task)
+            with obs_trace.span("lifecycle.refresh", device=device,
+                                trigger=trigger):
+                result = self._refresh_locked(device, trigger, force,
+                                              rows_by_task)
         finally:
             with self._lock:
                 self._refreshing.discard(device)
+        obs_metrics.current().counter(
+            "continual.refresh",
+            accepted=str(result.accepted).lower()).inc()
         with self._lock:
             self.history.append(result)
         return result
@@ -351,6 +358,8 @@ class ModelLifecycle:
         reports = self.check(device, current_fingerprint=current_fingerprint,
                              rows_by_task=rows)
         decision = self.decide(device, reports)
+        obs_metrics.current().counter(
+            "continual.drift_decisions", decision=decision).inc()
         if decision == "keep":
             return None
         if decision == "retire":

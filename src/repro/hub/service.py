@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import sys
 import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
@@ -43,19 +42,61 @@ from repro.hub.fingerprint import device_fingerprint
 from repro.hub.serving.cache import LatencyWindow, TunedConfigCache
 from repro.hub.store import RecordStore
 from repro.hub.transfer import SourceSelection, select_sources
+from repro.obs import get_logger
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
+
+log = get_logger("hub")
 
 
-@dataclasses.dataclass
 class HubStats:
-    hits: int = 0
-    cache_hits: int = 0      # hits answered by the LRU (zero I/O; subset)
-    misses: int = 0
-    jobs: int = 0            # batched TuneSession jobs run
-    dedup_skips: int = 0     # requests already pending/in-flight
-    measurements: int = 0    # total new on-device measurements
-    poisoned: int = 0        # measurements that crashed/timed out/quarantined
-    refreshes: int = 0       # accepted continual-refresh versions
-    refresh_rejects: int = 0  # refresh attempts the guard (or floor) refused
+    """Counter view over a hub's `MetricsRegistry` (`hub.<field>` keys).
+
+    Keeps the old dataclass surface — `stats.hits`, `stats.jobs += 1`,
+    dataclass-style repr — while the counts themselves live in the
+    registry, so `--obs` exposition and the `--stats` columns can never
+    disagree. Each hub owns a private registry: two hubs in one process
+    never share counters."""
+
+    FIELDS = ("hits",           # registry/cache answers
+              "cache_hits",     # hits answered by the LRU (zero I/O; subset)
+              "misses",
+              "jobs",           # batched TuneSession jobs run
+              "dedup_skips",    # requests already pending/in-flight
+              "measurements",   # total new on-device measurements
+              "poisoned",       # measurements crashed/timed out/quarantined
+              "refreshes",      # accepted continual-refresh versions
+              "refresh_rejects")   # attempts the guard (or floor) refused
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        object.__setattr__(self, "registry",
+                           registry if registry is not None
+                           else MetricsRegistry())
+
+    def _counter(self, field: str):
+        return self.registry.counter(f"hub.{field}")
+
+    def inc(self, field: str, n: int = 1) -> None:
+        self._counter(field).inc(n)
+
+    def __getattr__(self, name: str) -> int:
+        if name in self.FIELDS:
+            return int(self._counter(name).value)
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in self.FIELDS:        # stats.jobs += 1 (tests do this)
+            c = self._counter(name)
+            c.inc(value - c.value)
+            return
+        object.__setattr__(self, name, value)
+
+    def to_dict(self) -> Dict[str, int]:
+        return {f: getattr(self, f) for f in self.FIELDS}
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{f}={getattr(self, f)}" for f in self.FIELDS)
+        return f"HubStats({body})"
 
 
 @dataclasses.dataclass
@@ -124,14 +165,20 @@ class TuningHub:
         self.refresh = refresh
         self._lifecycle = lifecycle
         self._lifecycle_cfg = lifecycle_cfg
-        self.stats = HubStats()
+        # per-hub telemetry: counters AND latency windows live in one
+        # private registry (`hub.metrics`), so `--stats` columns and the
+        # `--obs` exposition read the same instruments
+        self.metrics = MetricsRegistry()
+        self.stats = HubStats(self.metrics)
         # served-winner LRU + latency windows: the fine-grained read path.
         # A hit touches ONLY these (each has its own lock) — never the hub
         # lock, the device job locks, or the store — so reads cannot
         # serialize behind an in-flight tuning job (regression-tested).
         self.config_cache = TunedConfigCache(cache_size)
-        self.hit_latency = LatencyWindow()
-        self.miss_latency = LatencyWindow()
+        self.hit_latency = LatencyWindow(histogram=self.metrics.histogram(
+            "hub.latency_seconds", path="hit"))
+        self.miss_latency = LatencyWindow(histogram=self.metrics.histogram(
+            "hub.latency_seconds", path="miss"))
         self._stats_lock = threading.Lock()     # HubStats counters only
         self._lock = threading.RLock()          # hub state (queues)
         self._dev_locks: Dict[str, threading.Lock] = {}  # one job per device
@@ -354,8 +401,8 @@ class TuningHub:
             # --stats read, not just a stderr traceback
             with self._stats_lock:
                 self.stats.refresh_rejects += 1
-            print(f"[hub] continual refresh({device}) failed: {e!r}",
-                  file=sys.stderr)
+            log.warning("continual refresh failed", device=device,
+                        error=repr(e))
             return
         with self._lock:
             if result is None:
@@ -400,6 +447,15 @@ class TuningHub:
             t.join(timeout)
 
     def _tune_batch(self, device: str, tasks: Sequence[Workload]):
+        t0 = time.perf_counter()
+        with obs_trace.span("hub.tune_batch", device=device,
+                            n_tasks=len(tasks)):
+            result = self._tune_batch_inner(device, tasks)
+        self.metrics.histogram("hub.tune_batch_seconds").observe(
+            time.perf_counter() - t0)
+        return result
+
+    def _tune_batch_inner(self, device: str, tasks: Sequence[Workload]):
         sel = self._selection_for(device)
         # resolved fresh per job: Strategy instances carry per-job state
         strategy: Union[str, Strategy] = resolve_strategy(self.strategy)

@@ -15,19 +15,22 @@ continual-learning refresh retiring a model — both call
 an invalidated (or evicted) key simply repopulates on its next hit.
 
 `LatencyWindow` is the serving-latency instrument behind `--stats` and the
-serve bench: a fixed-size ring of the most recent samples with percentile
-readout (p50/p99). A ring, not a histogram — the windows are small (2k
-samples) and exact percentiles over the recent window are what the QPS gate
-pins.
+serve bench. Since the telemetry unification it lives in
+`repro.obs.metrics` (re-exported here for its long-standing import path):
+the same fixed-size ring with exact nearest-rank percentiles, now backed by
+an obs `Histogram` so the `--stats` p50/p99 columns and the registry
+exposition read the SAME samples.
 """
 from __future__ import annotations
 
-import math
 import threading
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 from repro.autotune.space import ProgramConfig
+from repro.obs.metrics import LatencyWindow
+
+__all__ = ["CacheEntry", "LatencyWindow", "TunedConfigCache"]
 
 # (served config, the registry's recorded winner throughput — None when the
 # entry came from a store fallback that recorded no winner)
@@ -106,37 +109,3 @@ class TunedConfigCache:
                     "misses": self.misses, "evictions": self.evictions,
                     "invalidations": self.invalidations,
                     "hit_rate": self.hits / n if n else float("nan")}
-
-
-class LatencyWindow:
-    """Fixed-size ring of recent latency samples with exact percentiles."""
-
-    def __init__(self, capacity: int = 2048):
-        self._lock = threading.Lock()
-        self._samples: deque = deque(maxlen=capacity)
-        self.count = 0          # lifetime samples, not just the window
-
-    def record(self, seconds: float) -> None:
-        with self._lock:
-            self._samples.append(float(seconds))
-            self.count += 1
-
-    def percentile(self, p: float) -> float:
-        """The p-th percentile (0..100) of the windowed samples in seconds;
-        NaN when empty. Nearest-rank — the gate wants "no request slower
-        than", not an interpolated estimate."""
-        with self._lock:
-            xs = sorted(self._samples)
-        if not xs:
-            return float("nan")
-        rank = max(0, min(len(xs) - 1, math.ceil(p / 100.0 * len(xs)) - 1))
-        return xs[rank]
-
-    def summary(self) -> Dict[str, float]:
-        return {"n": self.count,
-                "p50_ms": self.percentile(50) * 1e3,
-                "p99_ms": self.percentile(99) * 1e3}
-
-    def __len__(self) -> int:
-        with self._lock:
-            return len(self._samples)

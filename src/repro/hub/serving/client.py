@@ -18,6 +18,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro.hub.serving import protocol
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -103,7 +104,15 @@ class HubClient:
               timeout_s: float) -> Dict[str, Any]:
         """One request/reply with failover: on any transport failure, drop
         the connection, refresh endpoints, advance to the next reader, and
-        retry — two full passes before giving up."""
+        retry — two full passes before giving up.
+
+        When the calling thread has an open trace span, its context rides
+        the request frame; the reader answers with a `serve.handle` span
+        event that is merged back into the active tracer, so a campaign
+        timeline shows reader-side time across the process boundary."""
+        ctx = obs_trace.current_context()
+        if ctx is not None:
+            req = dict(req, trace=list(ctx))
         attempts = max(2, 2 * max(1, len(self._endpoints)))
         last: Optional[Exception] = None
         for _ in range(attempts):
@@ -114,6 +123,11 @@ class HubClient:
                 reply = protocol.recv_frame(s)
                 if reply is None:
                     raise protocol.ProtocolError("reader hung up")
+                events = reply.pop("span_events", None)
+                if events:
+                    tracer = obs_trace.current_tracer()
+                    if tracer is not None:
+                        tracer.add_events(events)
                 return reply
             except (OSError, protocol.ProtocolError) as e:
                 last = e

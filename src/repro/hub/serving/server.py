@@ -36,7 +36,6 @@ import json
 import multiprocessing as mp
 import os
 import socket
-import sys
 import threading
 import time
 from typing import Any, Dict, List, Optional
@@ -46,8 +45,13 @@ from repro.autotune.space import default_config
 from repro.hub.serving import protocol
 from repro.hub.serving.cache import LatencyWindow, TunedConfigCache
 from repro.hub.store import RecordStore
+from repro.obs import get_logger
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import remote_event
 
 ENDPOINTS_NAME = "endpoints.json"
+
+log = get_logger("serve")
 
 
 def endpoints_path(root: str) -> str:
@@ -81,8 +85,13 @@ class _ReaderState:
         self.registry = Registry(path=registry_path)
         self.writer_port = writer_port
         self.cache = TunedConfigCache(cache_size)
-        self.hit_latency = LatencyWindow()
-        self.miss_latency = LatencyWindow()
+        # per-reader registry: the RPC `stats` op and the latency summary
+        # columns read the same histogram samples
+        self.metrics = MetricsRegistry()
+        self.hit_latency = LatencyWindow(histogram=self.metrics.histogram(
+            "serve.latency_seconds", path="hit"))
+        self.miss_latency = LatencyWindow(histogram=self.metrics.histogram(
+            "serve.latency_seconds", path="miss"))
         self.served = 0
         self.tunes_forwarded = 0
         self._lock = threading.Lock()       # counters only
@@ -108,6 +117,22 @@ class _ReaderState:
         return reply
 
     def handle(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        """Serve one request; when it carries a `trace` context (a client
+        running under a campaign tracer), return a `serve.handle` span
+        event with the reply for the client to merge into its timeline."""
+        ctx = req.get("trace")
+        if ctx is None:
+            return self._handle(req)
+        t0_wall, t0 = time.time(), time.perf_counter()
+        reply = self._handle(req)
+        reply["span_events"] = [remote_event(
+            "serve.handle", (ctx[0], ctx[1]), t0_wall,
+            time.perf_counter() - t0,
+            status="ok" if reply.get("ok") else "error",
+            rid=self.rid, op=req.get("op"), source=reply.get("source"))]
+        return reply
+
+    def _handle(self, req: Dict[str, Any]) -> Dict[str, Any]:
         op = req.get("op")
         if op == "ping":
             return {"ok": True, "op": "pong", "rid": self.rid}
@@ -116,7 +141,8 @@ class _ReaderState:
                     "tunes_forwarded": self.tunes_forwarded,
                     "cache": self.cache.counters(),
                     "hit": self.hit_latency.summary(),
-                    "miss": self.miss_latency.summary()}
+                    "miss": self.miss_latency.summary(),
+                    "metrics": self.metrics.to_json()}
         if op != "get_config":
             return {"ok": False, "error": f"unknown op {op!r}"}
 
@@ -414,8 +440,7 @@ class HubServer:
                     r.proc.kill()
                     r.proc.join(5.0)
                     r.conn.close()
-                    print(f"[serve] reader {r.rid} died; respawning",
-                          file=sys.stderr)
+                    log.warning("reader died; respawning", rid=r.rid)
                     self.respawns += 1
                     self._readers[i] = self._spawn_reader()
                     replaced = True
@@ -462,7 +487,8 @@ class HubServer:
         hit = getattr(self.hub, "hit_latency", None)
         miss = getattr(self.hub, "miss_latency", None)
         out: Dict[str, Any] = {
-            "writer": (dataclasses.asdict(stats)
+            "writer": (stats.to_dict() if hasattr(stats, "to_dict")
+                       else dataclasses.asdict(stats)
                        if dataclasses.is_dataclass(stats) else {}),
             "writer_cache": cache.counters() if cache is not None else {},
             "writer_hit": hit.summary() if hit is not None else {},

@@ -40,6 +40,9 @@ import time
 
 from repro.autotune.space import Workload
 from repro.configs.moses import DEFAULT as MOSES_CFG
+from repro.obs import get_logger
+
+log = get_logger("hub")
 
 
 def _smoke_cfg():
@@ -282,7 +285,8 @@ def run_serve(root: str, readers: int = 2, clients: int = 0,
         return 1 if errors else 0
 
 
-def print_stats(root: str, hub=None, drift: bool = True) -> int:
+def print_stats(root: str, hub=None, drift: bool = True,
+                metrics: bool = False) -> int:
     """Store statistics + the serving queue + per-device drift columns.
 
     `hub` defaults to a fresh `TuningHub` over `root` — a new process has an
@@ -322,6 +326,11 @@ def print_stats(root: str, hub=None, drift: bool = True) -> int:
     for d, n in per_dev.items():
         print(f"  {d:14s} {n:6d} pending")
     _print_serving_stats(root, hub)
+    if metrics:
+        print("hub metrics exposition:")
+        text = hub.metrics.to_text()
+        print("\n".join("  " + line for line in text.splitlines())
+              if text else "  (empty)")
     return 0
 
 
@@ -427,6 +436,9 @@ def main():
     ap.add_argument("--stats", action="store_true",
                     help="print record-store statistics (+ drift columns) "
                          "and exit")
+    ap.add_argument("--metrics", action="store_true",
+                    help="with --stats: also print the hub's metrics "
+                         "registry in text exposition format")
     ap.add_argument("--lineage", action="store_true",
                     help="print model lineage (all devices, or --device)")
     ap.add_argument("--compact", action="store_true",
@@ -457,7 +469,7 @@ def main():
         return run_serve(args.root, readers=args.readers,
                          clients=args.clients, seconds=args.serve_seconds)
     if args.stats:
-        return print_stats(args.root)
+        return print_stats(args.root, metrics=args.metrics)
     if args.lineage:
         return print_lineage(args.root, args.device)
     if args.compact:
@@ -490,24 +502,26 @@ def main():
                     refresh="auto" if args.refresh else "off")
     if args.bootstrap:
         n = bootstrap_store(hub.store, args.bootstrap.split(","), tasks)
-        print(f"[hub] bootstrapped {n} records")
+        log.info("bootstrapped store", records=n)
     queued = sum(hub.request(args.device, wl) for wl in tasks)
-    print(f"[hub] {queued} task(s) queued ({len(tasks) - queued} already "
-          f"served/pending) for {args.device}")
+    log.info("tasks queued", device=args.device, queued=queued,
+             already_served=len(tasks) - queued)
     results = hub.flush(args.device)
     sel = hub.selection(args.device)
     if sel is not None:
-        print(f"[hub] sources for {args.device}: "
-              f"{[(d, round(w, 3)) for d, w in sel.sources]} "
-              f"(ranked {[(d, round(s, 3)) for d, s in sel.ranked]})")
+        log.info("transfer sources",
+                 device=args.device,
+                 sources=[(d, round(w, 3)) for d, w in sel.sources],
+                 ranked=[(d, round(s, 3)) for d, s in sel.ranked])
     for r in results:
-        print(f"[hub] job: {len(r.tasks)} task(s), "
-              f"{r.total_measurements} measurements, "
-              f"{r.total_search_seconds:.1f}s simulated search time")
+        log.info("tuning job done", tasks=len(r.tasks),
+                 measurements=r.total_measurements,
+                 simulated_search_s=round(r.total_search_seconds, 1))
     hub.join_refreshes()
     if args.refresh:
-        print(f"[hub] continual refresh: {hub.stats.refreshes} accepted, "
-              f"{hub.stats.refresh_rejects} rejected")
+        log.info("continual refresh summary",
+                 accepted=hub.stats.refreshes,
+                 rejected=hub.stats.refresh_rejects)
     print(f"[hub] registry -> {hub.registry.path}; stats: {hub.stats}")
     return 0
 

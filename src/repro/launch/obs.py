@@ -1,0 +1,201 @@
+"""Observability CLI: inspect, validate, and diff campaign flight records.
+
+    PYTHONPATH=src python -m repro.launch.obs --summarize DIR
+    PYTHONPATH=src python -m repro.launch.obs --check DIR
+    PYTHONPATH=src python -m repro.launch.obs --export DIR [--out PATH]
+    PYTHONPATH=src python -m repro.launch.obs --diff DIR_A DIR_B
+
+`DIR` is a flight-recorder artifact directory (containing `events.jsonl` +
+`campaign.trace.json`, e.g. the path passed to `run_campaign(obs=...)` or
+`launch.train --obs`), or any directory with an `obs/` subdirectory.
+
+--summarize   attribute campaign wall time to the span taxonomy (measure /
+              update / search / finish / overhead), report queue-wait
+              percentiles and top counters.
+--check       validate the artifacts (every events.jsonl line parses, the
+              span tree is non-empty, single-rooted, orphan-free, every
+              span closed ok|error); exit non-zero on any problem — the CI
+              obs smoke gate.
+--export      rewrite the merged span timeline as a standalone Chrome-trace
+              JSON (open in chrome://tracing or https://ui.perfetto.dev).
+--diff        compare two runs' summaries and final metrics side by side.
+
+Jax-free: runs anywhere the artifacts are readable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs import to_chrome_trace, validate_events
+from repro.obs.recorder import (load_events, load_trace, summarize_trace)
+
+
+def _final_metrics(events: List[Dict]) -> Optional[Dict]:
+    """The last metrics snapshot event in an events.jsonl stream."""
+    for e in reversed(events):
+        if e.get("kind") == "metrics" and "snapshot" in e:
+            return e["snapshot"]
+    return None
+
+
+def _load(path: str) -> Tuple[List[Dict], List[Dict]]:
+    return load_events(path), load_trace(path)
+
+
+def summarize(path: str) -> Dict:
+    events, spans = _load(path)
+    snap = _final_metrics(events)
+    reg_json = None
+    if snap is not None:
+        # summarize_trace reads percentiles off exposition-shaped dicts;
+        # rebuild one from the snapshot so merged runs work too
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.merge(snap)
+        reg_json = reg.to_json()
+    return summarize_trace(spans, registry_json=reg_json)
+
+
+def print_summary(path: str) -> int:
+    s = summarize(path)
+    events, _ = _load(path)
+    print(f"flight record: {path}")
+    print(f"  spans={s.get('n_spans', 0)} events={len(events)} "
+          f"root={s.get('root')} error-spans={s.get('error_spans', 0)}")
+    total = s.get("total_wall_s", 0.0)
+    print(f"  campaign wall: {total:.3f}s; attribution "
+          f"{s.get('attributed_pct', 0.0):.1f}% across:")
+    cats = s.get("categories_s", {})
+    for cat in ("measure", "update", "search", "finish", "overhead"):
+        if cat in cats:
+            sec = cats[cat]
+            pct = 100.0 * sec / total if total > 0 else 0.0
+            print(f"    {cat:10s} {sec:10.3f}s {pct:6.1f}%")
+    qw = s.get("queue_wait")
+    if qw:
+        print(f"  queue-wait: n={qw['n']} total={qw['total_s']:.3f}s "
+              f"p50={qw['p50_ms']:.2f}ms p99={qw['p99_ms']:.2f}ms")
+    ms = s.get("measure_seconds_simulated")
+    if ms is not None:
+        print(f"  simulated measure seconds: {ms:.1f}")
+    grants = [e for e in events if e.get("kind") == "grant"]
+    if grants:
+        by_reason: Dict[str, int] = {}
+        for g in grants:
+            by_reason[g.get("reason", "?")] = \
+                by_reason.get(g.get("reason", "?"), 0) + 1
+        print(f"  grants: {len(grants)} "
+              f"({', '.join(f'{k}={v}' for k, v in sorted(by_reason.items()))})")
+    for name, row in sorted(s.get("by_name", {}).items()):
+        print(f"    span {name:16s} n={row['n']:5d} {row['seconds']:.3f}s")
+    return 0
+
+
+def check(path: str) -> int:
+    """The CI gate: artifacts present, parseable, span tree well-formed."""
+    problems: List[str] = []
+    try:
+        events = load_events(path)
+    except (OSError, ValueError) as e:
+        print(f"[obs] CHECK FAIL: events.jsonl: {e}", file=sys.stderr)
+        return 1
+    if not events:
+        problems.append("events.jsonl is empty")
+    for i, e in enumerate(events):
+        if "t" not in e or "kind" not in e:
+            problems.append(f"event {i} missing t/kind: {e}")
+    try:
+        spans = load_trace(path)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[obs] CHECK FAIL: campaign.trace.json: {e}",
+              file=sys.stderr)
+        return 1
+    problems.extend(validate_events(spans))
+    if problems:
+        for p in problems:
+            print(f"[obs] CHECK FAIL: {p}", file=sys.stderr)
+        return 1
+    n_spans = len([e for e in spans if e.get("ph") == "X"])
+    print(f"[obs] check OK: {len(events)} event(s), {n_spans} span(s), "
+          f"single-rooted tree")
+    return 0
+
+
+def export(path: str, out: Optional[str]) -> int:
+    spans = load_trace(path)
+    out = out or os.path.join(
+        path if os.path.isdir(path) else os.path.dirname(path),
+        "trace.export.json")
+    with open(out, "w") as f:
+        json.dump(to_chrome_trace(spans), f)
+    print(f"[obs] wrote {out} ({len(spans)} event(s)); open in "
+          f"chrome://tracing or https://ui.perfetto.dev")
+    return 0
+
+
+def diff(path_a: str, path_b: str) -> int:
+    sa, sb = summarize(path_a), summarize(path_b)
+    ea, eb = load_events(path_a), load_events(path_b)
+    print(f"{'':12s} {'A':>12s} {'B':>12s} {'delta':>12s}")
+    print(f"{'A':3s}= {path_a}")
+    print(f"{'B':3s}= {path_b}")
+
+    def row(label: str, va, vb, fmt: str = "{:.3f}") -> None:
+        da = fmt.format(va) if va is not None else "-"
+        db = fmt.format(vb) if vb is not None else "-"
+        dd = (fmt.format(vb - va)
+              if va is not None and vb is not None else "-")
+        print(f"  {label:12s} {da:>12s} {db:>12s} {dd:>12s}")
+
+    row("wall_s", sa.get("total_wall_s"), sb.get("total_wall_s"))
+    cats = sorted(set(sa.get("categories_s", {}))
+                  | set(sb.get("categories_s", {})))
+    for c in cats:
+        row(c + "_s", sa.get("categories_s", {}).get(c),
+            sb.get("categories_s", {}).get(c))
+    qa, qb = sa.get("queue_wait") or {}, sb.get("queue_wait") or {}
+    row("qwait_p99_ms", qa.get("p99_ms"), qb.get("p99_ms"), "{:.2f}")
+    row("measure_sim_s", sa.get("measure_seconds_simulated"),
+        sb.get("measure_seconds_simulated"), "{:.1f}")
+    ma, mb = _final_metrics(ea) or {}, _final_metrics(eb) or {}
+    keys = sorted(set(ma.get("counters", {})) | set(mb.get("counters", {})))
+    for k in keys:
+        row(k, ma.get("counters", {}).get(k),
+            mb.get("counters", {}).get(k), "{:.0f}")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--summarize", metavar="DIR",
+                    help="print the wall-time attribution summary")
+    ap.add_argument("--check", metavar="DIR",
+                    help="validate artifacts; non-zero exit on problems")
+    ap.add_argument("--export", metavar="DIR",
+                    help="write a standalone Chrome-trace JSON")
+    ap.add_argument("--out", default=None,
+                    help="output path for --export")
+    ap.add_argument("--diff", nargs=2, metavar=("DIR_A", "DIR_B"),
+                    help="compare two flight records")
+    args = ap.parse_args(argv)
+
+    if not any((args.summarize, args.check, args.export, args.diff)):
+        ap.error("pass --summarize, --check, --export, or --diff")
+    rc = 0
+    if args.check:
+        rc = max(rc, check(args.check))
+    if args.summarize:
+        rc = max(rc, print_summary(args.summarize))
+    if args.export:
+        rc = max(rc, export(args.export, args.out))
+    if args.diff:
+        rc = max(rc, diff(args.diff[0], args.diff[1]))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

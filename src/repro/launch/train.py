@@ -27,15 +27,18 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.moses import DEFAULT as MOSES_CFG
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import build_model
+from repro.obs import get_logger
 from repro.train.data import DataConfig, data_iterator
 from repro.train.optimizer import AdamW, AdamWConfig, cosine_schedule
 from repro.train.train_loop import LoopConfig, run_training
+
+log = get_logger("train")
 
 
 def maybe_autotune(device: str, cfg, source: str = None,
                    hub_root: str = "artifacts/hub",
                    scheduler: str = "serial", trials: int = 48,
-                   dry_run: bool = False):
+                   dry_run: bool = False, obs: str = None):
     from repro.autotune.dataset import generate_records, training_task_pool
     from repro.autotune.registry import Registry
     from repro.autotune.tasks import arch_tasks
@@ -59,8 +62,8 @@ def maybe_autotune(device: str, cfg, source: str = None,
         # the stock source corpus on first run), tune on miss, and persist
         # winners into the kernels' default registry
         from repro.hub import TuningHub, bootstrap_store
-        print(f"[autotune] Moses adaptation auto -> {device} "
-              f"(hub at {hub_root}, scheduler={scheduler})")
+        log.info("Moses adaptation via hub", target=device,
+                 hub_root=hub_root, scheduler=scheduler)
         hub = TuningHub(hub_root, moses_cfg=moses_cfg, registry=Registry(),
                         trials_per_task=trials, scheduler=scheduler)
         bootstrap_store(hub.store, [moses_cfg.source_device],
@@ -70,16 +73,17 @@ def maybe_autotune(device: str, cfg, source: str = None,
         results = hub.flush(device)
         sel = hub.selection(device)
         if sel is not None:
-            print(f"[autotune] sources: "
-                  f"{[(d, round(w, 3)) for d, w in sel.sources]}")
+            log.info("transfer sources selected",
+                     sources=[(d, round(w, 3)) for d, w in sel.sources])
         n = sum(len(r.tasks) for r in results)
-        print(f"[autotune] tuned {n} tasks -> {hub.registry.path} "
-              f"({len(tasks) - queued} already served)")
+        log.info("hub autotune done", tuned_tasks=n,
+                 registry=hub.registry.path,
+                 already_served=len(tasks) - queued)
         return
 
     src_device = source or moses_cfg.source_device
-    print(f"[autotune] Moses adaptation {src_device} -> {device} "
-          f"(scheduler={scheduler})")
+    log.info("Moses adaptation", source=src_device, target=device,
+             scheduler=scheduler)
     pool = training_task_pool(include_archs=False)
     src = generate_records(pool, src_device,
                            programs_per_task=8 if dry_run else 24, seed=0)
@@ -94,21 +98,25 @@ def maybe_autotune(device: str, cfg, source: str = None,
                               trials_per_task=trials)
         campaign = session.run_many([(device, tasks)], strategy="moses",
                                     scheduler="gradient", speculative=True,
-                                    return_campaign=True)
+                                    return_campaign=True, obs=obs)
         result = campaign.results[0]
-        print(f"[autotune] campaign: {campaign.total_measurements} "
-              f"measurements, {campaign.spent_seconds:.1f}s simulated "
-              f"device time ({campaign.wall_seconds:.1f}s parallel wall), "
-              f"{len(campaign.trace)} grants; draft acceptance "
-              f"{campaign.spec_stats.acceptance:.2f}, full-model calls cut "
-              f"{campaign.spec_stats.full_model_reduction:.1f}x")
+        log.info("campaign done",
+                 measurements=campaign.total_measurements,
+                 simulated_s=round(campaign.spent_seconds, 1),
+                 wall_s=round(campaign.wall_seconds, 1),
+                 grants=len(campaign.trace),
+                 draft_acceptance=round(campaign.spec_stats.acceptance, 2),
+                 full_model_reduction=round(
+                     campaign.spec_stats.full_model_reduction, 1))
+        if obs:
+            log.info("campaign telemetry written", obs_dir=obs)
     else:
         result = tune(tasks, device, "moses", moses_cfg,
                       trials_per_task=trials, pretrained_params=params,
                       source_pool=src, cost_model=model)
         reg.ingest(result)
     reg.save()
-    print(f"[autotune] tuned {len(result.tasks)} tasks -> {reg.path}")
+    log.info("autotune done", tuned_tasks=len(result.tasks), registry=reg.path)
 
 
 def main():
@@ -141,6 +149,11 @@ def main():
     ap.add_argument("--dry-run", action="store_true",
                     help="run the --autotune path on a tiny budget and exit "
                          "before training (the CI scheduler smoke leg)")
+    ap.add_argument("--obs", default=None, metavar="DIR",
+                    help="write campaign telemetry (events.jsonl + Chrome "
+                         "trace + metrics snapshot) to DIR; applies to the "
+                         "--scheduler gradient autotune path. Inspect with "
+                         "`python -m repro.launch.obs --summarize DIR`")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -158,9 +171,10 @@ def main():
     if args.autotune:
         maybe_autotune(args.autotune, cfg, source=args.source,
                        hub_root=args.hub_root, scheduler=args.scheduler,
-                       trials=args.autotune_trials, dry_run=args.dry_run)
+                       trials=args.autotune_trials, dry_run=args.dry_run,
+                       obs=args.obs)
         if args.dry_run:
-            print("[dry-run] autotune path OK; skipping training")
+            log.info("dry-run: autotune path OK; skipping training")
             return
 
     mesh = (make_production_mesh(multi_pod=args.multi_pod)

@@ -1,0 +1,36 @@
+"""Unified telemetry: metrics registry, trace spans, flight recorder.
+
+Jax-free by design — serving reader processes and spawn farm workers
+import from here. Three layers:
+
+  * `repro.obs.metrics` — counters/gauges/histograms with one fixed
+    log-spaced bucket grid (merge-exact), named-scope instruments, text +
+    JSON exposition, picklable snapshot/merge; `metrics.current()` is the
+    process (or active campaign) registry.
+  * `repro.obs.trace` — `span("tune.round", device=..., task=...)`
+    context managers emitting Chrome-trace/Perfetto events, with
+    `(trace_id, span_id)` contexts small enough to ride farm pipe
+    messages and serving RPC frames; `validate_events` pins span-tree
+    wellformedness.
+  * `repro.obs.recorder` — `FlightRecorder` ties both to per-campaign
+    artifacts: append-only `events.jsonl` + `campaign.trace.json`.
+
+Plus `get_logger` (obs.logging): the structured `[name] msg key=value`
+status logger that replaced the stack's ad-hoc prints
+(`REPRO_LOG_LEVEL`-controlled, quiet under pytest).
+"""
+from repro.obs.logging import get_logger
+from repro.obs.metrics import (Counter, Gauge, Histogram, LatencyWindow,
+                               MetricsRegistry)
+from repro.obs.recorder import FlightRecorder, summarize_trace
+from repro.obs.trace import (SpanContext, Tracer, current_context,
+                             remote_event, span, to_chrome_trace,
+                             validate_events)
+from repro.obs import metrics, trace
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "LatencyWindow", "MetricsRegistry",
+    "FlightRecorder", "summarize_trace", "SpanContext", "Tracer",
+    "current_context", "remote_event", "span", "to_chrome_trace",
+    "validate_events", "get_logger", "metrics", "trace",
+]

@@ -41,6 +41,7 @@ from repro.configs.moses import MosesConfig
 from repro.core.cost_model import CostModel
 from repro.core.features import FeatureCache
 from repro.core.cost_model import RecordsBuilder
+from repro.obs import trace as obs_trace
 from repro.sched.executor import MeasurementExecutor, batch_wall_seconds
 from repro.sched.speculative import SpeculativeScorer
 
@@ -147,22 +148,27 @@ class TaskTuner:
         assert self.active, "step() on an inactive task"
         bsz = batch_size if batch_size is not None else self.cfg.top_k_measure
         prev_latency = self.best_latency
-        cands = evolutionary_search(
-            self.wl, self._score_fn, self.rng,
-            population=self.cfg.population_size,
-            rounds=self.cfg.evolution_rounds,
-            mutation_prob=self.cfg.mutation_prob,
-            top_k=bsz, eps_greedy=self.cfg.eps_greedy, seen=self.seen,
-            seed_configs=[c for c, _ in
-                          sorted(self.measured, key=lambda t: -t[1])[:8]],
-            feature_cache=self.cache)
+        with obs_trace.span("round.search", device=self.device,
+                            task=self.wl.key()):
+            cands = evolutionary_search(
+                self.wl, self._score_fn, self.rng,
+                population=self.cfg.population_size,
+                rounds=self.cfg.evolution_rounds,
+                mutation_prob=self.cfg.mutation_prob,
+                top_k=bsz, eps_greedy=self.cfg.eps_greedy, seen=self.seen,
+                seed_configs=[c for c, _ in
+                              sorted(self.measured, key=lambda t: -t[1])[:8]],
+                feature_cache=self.cache)
         if not cands:
             self.exhausted = True
             return RoundStats(0, 0, 0.0, 0.0, 0.0, 0.0, False, True)
 
-        feats = self.cache.features_batch(self.wl, cands)
-        outcomes = self.executor.measure_batch(self.wl, cands, self.device,
-                                               trial=self.rounds)
+        with obs_trace.span("round.measure", device=self.device,
+                            task=self.wl.key(), n=len(cands)):
+            feats = self.cache.features_batch(self.wl, cands)
+            outcomes = self.executor.measure_batch(self.wl, cands,
+                                                   self.device,
+                                                   trial=self.rounds)
         ok_feats = []
         failed = 0
         for out, f in zip(outcomes, feats):
@@ -192,22 +198,25 @@ class TaskTuner:
             train_builder = (self.shared_builder
                              if self.shared_builder is not None
                              else self.builder)
-            if self.shared_builder is not None:
-                self.strategy.set_task_state(self._task_state)
-            upd = self.strategy.on_round(train_builder,
-                                         np.stack(ok_feats), self.rounds)
-            if self.shared_builder is not None:
-                self._task_state = self.strategy.task_state()
+            with obs_trace.span("round.update", device=self.device,
+                                task=self.wl.key()):
+                if self.shared_builder is not None:
+                    self.strategy.set_task_state(self._task_state)
+                upd = self.strategy.on_round(train_builder,
+                                             np.stack(ok_feats), self.rounds)
+                if self.shared_builder is not None:
+                    self._task_state = self.strategy.task_state()
+                if self.scorer is not None and not self.scorer.distill:
+                    # label-supervised drafts must train on the same corpus
+                    # the full model does — a task-local draft screening a
+                    # device-corpus model discards candidates the stronger
+                    # verifier would keep. (Distilling drafts feed
+                    # themselves from every full-model evaluation; no
+                    # snapshot needed.)
+                    self.scorer.refit(train_builder.snapshot())
             update_seconds = upd.cost_seconds
             wall += upd.cost_seconds
             terminated = upd.terminate
-            if self.scorer is not None and not self.scorer.distill:
-                # label-supervised drafts must train on the same corpus the
-                # full model does — a task-local draft screening a
-                # device-corpus model discards candidates the stronger
-                # verifier would keep. (Distilling drafts feed themselves
-                # from every full-model evaluation; no snapshot needed.)
-                self.scorer.refit(train_builder.snapshot())
         self.search_seconds += measure_seconds + update_seconds
         self.meas_seconds += measure_seconds
         self.rounds += 1
@@ -227,18 +236,20 @@ class TaskTuner:
                   else self.cfg.top_k_measure)
         if (n_pred > 0 and self.strategy.params is not None
                 and not self.exhausted and self.measured):
-            cands = evolutionary_search(
-                self.wl, self._score_fn, self.rng,
-                population=self.cfg.population_size,
-                rounds=self.cfg.evolution_rounds, top_k=n_pred,
-                seen=self.seen, feature_cache=self.cache)
-            cands = cands or [default_config(self.wl)]
-            scores = self.cost_model.batched_predict(
-                self.strategy.params, self.cache.features_batch(self.wl,
-                                                                cands))
-            top = cands[int(np.argmax(scores))]
-            outcome = self.executor.measure_batch(
-                self.wl, [top], self.device, trial=97)[0]
+            with obs_trace.span("tune.finish", device=self.device,
+                                task=self.wl.key()):
+                cands = evolutionary_search(
+                    self.wl, self._score_fn, self.rng,
+                    population=self.cfg.population_size,
+                    rounds=self.cfg.evolution_rounds, top_k=n_pred,
+                    seen=self.seen, feature_cache=self.cache)
+                cands = cands or [default_config(self.wl)]
+                scores = self.cost_model.batched_predict(
+                    self.strategy.params,
+                    self.cache.features_batch(self.wl, cands))
+                top = cands[int(np.argmax(scores))]
+                outcome = self.executor.measure_batch(
+                    self.wl, [top], self.device, trial=97)[0]
             if outcome.ok:
                 self.measured.append((top, outcome.throughput))
                 self.recorded.append((top, outcome.throughput, 97))

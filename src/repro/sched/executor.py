@@ -57,6 +57,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.autotune import devices as dev_mod
 from repro.autotune.space import ProgramConfig, Workload
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +116,14 @@ class _Slot:
         # exactly the tasks that produce nothing.
         self.timeout_cost = timeout_cost
         self.on_timeout = on_timeout
+        # trace propagation: captured at submission, in the caller's
+        # thread — the worker-side measure span parents to the caller's
+        # open span (round.measure) even across the farm pipe, and the
+        # queue-wait histogram measures submit -> begin
+        self.ctx = obs_trace.current_context()
+        self.tracer = obs_trace.current_tracer()
+        self.t_submit = time.monotonic()
+        self.t_submit_wall = time.time()
         self._event = threading.Event()
         self._lock = threading.Lock()
         self._outcome: Optional[MeasureOutcome] = None
@@ -216,6 +226,10 @@ class MeasurementExecutor:
         if not outcome.ok:
             self._quarantine_add(slot.request, outcome.error or "failed",
                                  worker=outcome.worker)
+        reg = obs_metrics.current()
+        reg.counter("exec.outcomes", backend=self.backend,
+                    ok=str(outcome.ok).lower()).inc()
+        reg.counter("exec.measure_seconds_total").inc(outcome.seconds)
         slot.offer(outcome)
 
     # --- worker side (thread backend; the farm mirrors this loop) ---------
@@ -270,6 +284,7 @@ class MeasurementExecutor:
         with self._qlock:
             entry = self._quarantine.get(self._qkey(req))
         if entry is not None:
+            obs_metrics.current().counter("exec.quarantine_hits").inc()
             slot.offer(MeasureOutcome(
                 req, None, 0.0, 0, error=f"quarantined: {entry.error}"))
             return slot
@@ -370,11 +385,26 @@ class ThreadMeasurementExecutor(MeasurementExecutor):
                 self._queue.task_done()
                 continue
             w.busy = (slot, time.monotonic())
+            obs_metrics.current().histogram(
+                "exec.queue_wait_seconds", backend="thread").observe(
+                max(0.0, time.monotonic() - slot.t_submit))
+            t0_wall, t0 = time.time(), time.perf_counter()
             try:
                 out = self._attempt(slot.request)
             finally:
                 w.busy = None
                 self._queue.task_done()
+            if slot.tracer is not None:
+                # same span name as the farm workers emit, so the
+                # taxonomy (and the fault tests) are backend-agnostic
+                slot.tracer.add_events([obs_trace.remote_event(
+                    "exec.measure",
+                    slot.ctx or (slot.tracer.trace_id, None),
+                    t0_wall, time.perf_counter() - t0,
+                    status="ok" if out.ok else "error",
+                    worker=threading.current_thread().name,
+                    device=slot.request.device, seq=slot.request.seq,
+                    attempts=out.attempts, error=out.error)])
             self._finalize(slot, out)
             if w.retired:
                 # a replacement already took this slot's place in the pool;
@@ -396,6 +426,8 @@ class ThreadMeasurementExecutor(MeasurementExecutor):
                     self._workers.remove(w)
                     self._workers.append(self._spawn_worker())
                     self.respawns += 1
+                    obs_metrics.current().counter(
+                        "exec.respawns", backend="thread").inc()
                     stale.append((w, busy[0]))
             for w, slot in stale:
                 self._finalize(slot, MeasureOutcome(

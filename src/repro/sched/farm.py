@@ -58,6 +58,8 @@ from collections import deque
 from multiprocessing import connection as mp_conn
 from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import remote_event
 from repro.sched.executor import (MeasureOutcome, MeasurementExecutor,
                                   _Slot)
 
@@ -93,7 +95,7 @@ def _farm_worker_main(wid: int, pin: Optional[str], conn,
             break
         if msg is None:
             break
-        seq, wl, cfg, device, trial = msg
+        seq, wl, cfg, device, trial, ctx = msg
         # per-measurement heartbeat: the parent arms the kill timer on this
         # ack, so a still-booting worker can't eat into the timeout budget
         try:
@@ -105,6 +107,7 @@ def _farm_worker_main(wid: int, pin: Optional[str], conn,
         spent = 0.0     # every attempt occupies the board and is charged
         thr: Optional[float] = None
         err: Optional[str] = None
+        t0_wall, t0 = time.time(), time.perf_counter()
         while True:
             attempts += 1
             try:
@@ -121,9 +124,17 @@ def _farm_worker_main(wid: int, pin: Optional[str], conn,
                     break
                 if backoff_s > 0:
                     time.sleep(backoff_s * (2 ** (attempts - 1)))
+        # span context shipped by value with the instruction; the worker
+        # builds plain event dicts (no Tracer in the child) and returns
+        # them with the result for the parent to merge into the timeline
+        events = [] if ctx is None else [remote_event(
+            "exec.measure", ctx, t0_wall, time.perf_counter() - t0,
+            status="ok" if err is None else "error",
+            worker=f"p{wid}", device=device, seq=seq,
+            attempts=attempts, error=err)]
         try:
             with send_lock:
-                conn.send(("done", seq, thr, spent, attempts, err))
+                conn.send(("done", seq, thr, spent, attempts, err, events))
         except (OSError, BrokenPipeError):
             break
     stop.set()
@@ -233,10 +244,24 @@ class ProcessMeasurementExecutor(MeasurementExecutor):
         w.proc.join(timeout=2.0)
         if inflight is not None:
             slot, _ = inflight
+            if slot.tracer is not None:
+                # the killed worker's span event died with it; synthesize
+                # one from the parent-side submission record so the trace
+                # still closes every in-flight measurement with `error`
+                slot.tracer.add_events([remote_event(
+                    "exec.measure",
+                    slot.ctx or (slot.tracer.trace_id, None),
+                    slot.t_submit_wall,
+                    max(0.0, time.time() - slot.t_submit_wall),
+                    status="error", worker=w.name,
+                    device=slot.request.device, seq=slot.request.seq,
+                    attempts=0, error=error)])
             self._finalize(slot, MeasureOutcome(
                 slot.request, None, slot.timeout_cost, 0, error=error,
                 worker=w.name))
         self.respawns += 1
+        obs_metrics.current().counter("exec.respawns",
+                                      backend="process").inc()
         if not self._shutdown:
             self._farm.append(self._spawn(w.wid))
 
@@ -288,14 +313,21 @@ class ProcessMeasurementExecutor(MeasurementExecutor):
                 if msg[0] == "begin":
                     if (w.inflight is not None
                             and w.inflight[0].request.seq == msg[1]):
-                        w.inflight = (w.inflight[0], now)   # arm the timer
+                        slot = w.inflight[0]
+                        w.inflight = (slot, now)            # arm the timer
+                        obs_metrics.current().histogram(
+                            "exec.queue_wait_seconds",
+                            backend="process").observe(
+                            max(0.0, now - slot.t_submit))
                     continue
                 if msg[0] != "done":
                     continue            # heartbeat
-                _, seq, thr, spent, attempts, err = msg
+                _, seq, thr, spent, attempts, err, events = msg
                 inflight, w.inflight = w.inflight, None
                 if inflight is not None and inflight[0].request.seq == seq:
                     slot = inflight[0]
+                    if slot.tracer is not None:
+                        slot.tracer.add_events(events)
                     self._finalize(slot, MeasureOutcome(
                         slot.request, thr, spent, attempts, error=err,
                         worker=w.name))
@@ -334,7 +366,7 @@ class ProcessMeasurementExecutor(MeasurementExecutor):
                 req = slot.request
                 try:
                     w.conn.send((req.seq, req.workload, req.config,
-                                 req.device, req.trial))
+                                 req.device, req.trial, slot.ctx))
                     w.inflight = (slot, None)   # timer arms on "begin" ack
                 except (OSError, BrokenPipeError):
                     self._pending.appendleft(slot)      # retry elsewhere

@@ -26,6 +26,7 @@ result ordering is submission-ordered — rerunning a campaign reproduces it.
 from __future__ import annotations
 
 import dataclasses
+import sys
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.autotune.space import Workload, default_config
@@ -35,6 +36,9 @@ from repro.autotune.tuner import TaskResult, TuneResult
 from repro.autotune import devices as dev_mod
 from repro.configs.moses import MosesConfig
 from repro.core.cost_model import CostModel, Records, resolve_cost_model
+from repro.obs import FlightRecorder
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.sched.engine import TaskTuner
 from repro.sched.executor import MeasurementExecutor, resolve_executor
 from repro.sched.speculative import (RandomFeatureDraft, SpecStats,
@@ -97,6 +101,9 @@ class CampaignResult:
     wall_seconds: float
     total_measurements: int
     spec_stats: Optional[SpecStats]
+    # wall-time attribution + queue-wait summary from the flight recorder
+    # (None unless the campaign ran with `obs=`); see obs/recorder.py
+    obs_summary: Optional[Dict[str, Any]] = None
 
     def curve(self) -> List[Tuple[float, float]]:
         """(cumulative measurement seconds, total best latency) per grant,
@@ -158,6 +165,7 @@ def run_campaign(
     model_update_cost: float = 2.0,
     seed_fn=None,
     share_model: bool = True,
+    obs: Union[FlightRecorder, str, None] = None,
 ) -> CampaignResult:
     """Run one scheduled tuning campaign over `jobs` = [(device, tasks)].
 
@@ -175,6 +183,14 @@ def run_campaign(
     task's scoring — the campaign-level sample-efficiency win the serial
     loop only gets sequentially. `share_model=False` isolates tasks
     completely (one strategy + builder each).
+
+    `obs` turns on the campaign flight recorder: a directory path gets a
+    recorder of its own (artifacts land there as `events.jsonl` +
+    `campaign.trace.json`), a `FlightRecorder` instance is used as-is
+    (started here if the caller has not; only a recorder started here is
+    stopped here). The result's `obs_summary` then carries the wall-time
+    attribution; tracing off (`obs=None`) costs one global read per span
+    site.
     """
     from repro.autotune.session import derive_job_seed
 
@@ -183,10 +199,28 @@ def run_campaign(
     strat_label = strategy_name(strategy)
     trials = (trials_per_task if trials_per_task is not None
               else moses_cfg.small_trials)
+
+    # flight recorder: start it BEFORE the executor exists so worker pools,
+    # unit construction, and every grant land in the campaign registry
+    recorder: Optional[FlightRecorder] = None
+    started_recorder = False
+    if isinstance(obs, str):
+        recorder = FlightRecorder(root=obs)
+    elif obs is not None:
+        recorder = obs
+    if recorder is not None:
+        started_recorder = not recorder._started
+        recorder.start()
+    obs_summary: Optional[Dict[str, Any]] = None
+
     # executor may be an instance, a backend name ("thread" | "process"),
     # or None (default thread pool); owned pools are shut down on exit
     executor, own_executor = resolve_executor(executor, workers=4)
     spec_stats = SpecStats() if speculative else None
+    campaign_span = obs_trace.span(
+        "campaign", strategy=strat_label, devices=len(list(jobs)),
+        tasks=sum(len(ts) for _, ts in jobs))
+    campaign_span.__enter__()
 
     # --- build one prepared TaskTuner per (device, workload) -------------
     units: List[_Unit] = []
@@ -194,26 +228,27 @@ def run_campaign(
     order: List[Tuple[str, List[Workload]]] = [(d, list(ts)) for d, ts in jobs]
     from repro.autotune.strategies import STRATEGY_REGISTRY
     from repro.core.cost_model import RecordsBuilder
-    # an instance spec with a registered name re-resolves fresh per device
-    # (instances carry per-job state); an UNregistered instance cannot be
-    # cloned, so it is only sound as the single shared strategy of a
-    # single-device share_model campaign — anything wider would re-prepare
-    # the one object under other units' feet
-    unit_spec = (strategy.name
-                 if isinstance(strategy, Strategy)
-                 and strategy.name in STRATEGY_REGISTRY else strategy)
-    if isinstance(unit_spec, Strategy):
-        n_scopes = (len({d for d, _ in jobs}) if share_model
-                    else sum(len(ts) for _, ts in jobs))
-        if n_scopes > 1:
-            raise ValueError(
-                f"strategy instance {type(strategy).__name__} is not in the "
-                "registry and cannot be re-instantiated per "
-                f"{'device' if share_model else 'task'} ({n_scopes} needed); "
-                "register it with @register_strategy or pass its name")
-    shared: Dict[str, Tuple[Strategy, RecordsBuilder]] = {}
-    shared_drafts: Dict[str, RandomFeatureDraft] = {}
     try:
+        # an instance spec with a registered name re-resolves fresh per
+        # device (instances carry per-job state); an UNregistered instance
+        # cannot be cloned, so it is only sound as the single shared
+        # strategy of a single-device share_model campaign — anything wider
+        # would re-prepare the one object under other units' feet
+        unit_spec = (strategy.name
+                     if isinstance(strategy, Strategy)
+                     and strategy.name in STRATEGY_REGISTRY else strategy)
+        if isinstance(unit_spec, Strategy):
+            n_scopes = (len({d for d, _ in jobs}) if share_model
+                        else sum(len(ts) for _, ts in jobs))
+            if n_scopes > 1:
+                raise ValueError(
+                    f"strategy instance {type(strategy).__name__} is not in "
+                    "the registry and cannot be re-instantiated per "
+                    f"{'device' if share_model else 'task'} "
+                    f"({n_scopes} needed); register it with "
+                    "@register_strategy or pass its name")
+        shared: Dict[str, Tuple[Strategy, RecordsBuilder]] = {}
+        shared_drafts: Dict[str, RandomFeatureDraft] = {}
         for device, tasks in order:
             for wl in tasks:
                 if seed_fn is not None:
@@ -297,18 +332,38 @@ def run_campaign(
                            key=lambda u: (u.priority(sched), -u.idx))
                 reason = "gradient"
             won_priority = unit.priority(sched)   # the value that won
-            stats = unit.tuner.step(per_round)
+            with obs_trace.span("tune.round", device=unit.tuner.device,
+                                task=unit.tuner.wl.key(), reason=reason,
+                                step=step + 1):
+                stats = unit.tuner.step(per_round)
             unit.absorb(stats, sched.cost_smoothing)
             spent += stats.device_seconds
             measured_s += stats.measure_seconds
             wall += stats.wall_seconds
             measurements += stats.measured + stats.failed
             step += 1
+            reg = obs_metrics.current()
+            reg.counter("sched.grants", reason=reason).inc()
+            reg.counter("sched.measure_seconds").inc(stats.measure_seconds)
+            reg.counter("sched.update_seconds").inc(stats.update_seconds)
+            reg.counter("sched.measurements").inc(stats.measured
+                                                  + stats.failed)
+            if stats.failed:
+                reg.counter("sched.failed").inc(stats.failed)
+            total_best = sum(u.tuner.best_latency * u.tuner.wl.count
+                             for u in units)
             trace.append(TraceEntry(
                 step, unit.tuner.key, reason, won_priority, spent,
-                measured_s, wall, measurements,
-                sum(u.tuner.best_latency * u.tuner.wl.count
-                    for u in units)))
+                measured_s, wall, measurements, total_best))
+            if recorder is not None:
+                # mirror of TraceEntry in the on-disk decision log: a
+                # campaign that dies mid-flight still shows every grant
+                recorder.event(
+                    "grant", step=step, key=unit.tuner.key, reason=reason,
+                    priority=round(won_priority, 9),
+                    measured=stats.measured, failed=stats.failed,
+                    spent_seconds=round(spent, 6),
+                    total_best_latency=round(total_best, 9))
 
         # --- wrap-up: prediction-only phase + assembly --------------------
         by_key: Dict[Tuple[str, str], TaskResult] = dict(raw_results)
@@ -324,6 +379,20 @@ def run_campaign(
     finally:
         if own_executor:
             executor.shutdown()
+        # inside the finally so an aborted campaign still closes its root
+        # span (status=error) and releases the recorder's registry/tracer
+        exc = sys.exc_info()
+        campaign_span.__exit__(*exc)
+        if recorder is not None:
+            if exc[0] is None:
+                recorder.event("campaign_result",
+                               spent_seconds=round(spent, 6),
+                               measured_seconds=round(measured_s, 6),
+                               measurements=measurements,
+                               grants=len(trace))
+                obs_summary = recorder.summary()
+            if started_recorder:
+                recorder.stop()
 
     results = []
     for device, tasks in order:
@@ -331,4 +400,4 @@ def run_campaign(
         results.append(TuneResult(strat_label, device, trs,
                                   sum(t.search_seconds for t in trs)))
     return CampaignResult(results, trace, spent, measured_s, wall,
-                          measurements, spec_stats)
+                          measurements, spec_stats, obs_summary=obs_summary)

@@ -514,3 +514,75 @@ class TestFaultInjector:
         with pytest.raises(OSError):
             fi(WL, cfg, "tpu_v5e")
         assert fi(WL, cfg, "tpu_v5e") == dev_mod.measure(WL, cfg, "tpu_v5e")
+
+
+# ---------------------------------------------------------------------------
+# cross-process span propagation under faults (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestCampaignTelemetryUnderFaults:
+    def test_farm_trace_single_rooted_with_error_spans(self, tmp_path):
+        """ISSUE 8 acceptance: a farm campaign with tracing enabled, under
+        FaultInjector worker kills, yields ONE well-formed trace — every
+        worker's exec.measure spans parent into the campaign tree (no
+        orphans), and killed workers' in-flight spans are closed with
+        status=error instead of dropped."""
+        from repro.obs import FlightRecorder, validate_events
+
+        fi = _injector("process", crash=0.08, seed=13)
+        ex = MeasurementExecutor(workers=4, backend="process", retries=0,
+                                 measure_fn=fi)
+        rec = FlightRecorder(str(tmp_path / "obs"))
+        try:
+            result = run_campaign(CAMPAIGN_JOBS, _tiny_cfg(),
+                                  strategy="ansor-random",
+                                  trials_per_task=16, executor=ex, obs=rec)
+        finally:
+            ex.shutdown()
+        events = rec.tracer.events
+        assert validate_events(events, expect_root="campaign") == []
+
+        meas = [e for e in events if e.get("name") == "exec.measure"]
+        assert meas, "no exec.measure spans came back over the farm pipes"
+        # spans were built IN the worker processes, not synthesized locally
+        worker_pids = {e["pid"] for e in meas} - {os.getpid()}
+        assert worker_pids, "all exec.measure spans carry the parent pid"
+
+        poisoned = sum(len(tk.poisoned or [])
+                       for r in result.results for tk in r.tasks)
+        assert poisoned > 0, "fault map never fired; raise crash= or reseed"
+        errors = [e for e in meas if e["args"]["status"] == "error"]
+        assert len(errors) >= poisoned
+        # the killed workers' spans were synthesized by the parent at
+        # respawn time (the worker died before it could answer)
+        killed = [e for e in errors if e["pid"] == os.getpid()]
+        assert killed, "no parent-synthesized span for a killed worker"
+        assert all("died" in str(e["args"].get("error", ""))
+                   for e in killed)
+
+        # every measure span parents to a live round.measure/tune.finish
+        ids = {e["args"]["span_id"] for e in events if e.get("ph") == "X"}
+        assert all(e["args"]["parent_id"] in ids for e in meas)
+
+        summary = result.obs_summary
+        assert summary["problems"] == []
+        assert summary["attributed_pct"] >= 95.0
+        assert summary["error_spans"] >= poisoned
+
+    def test_telemetry_does_not_perturb_faulted_replay(self, tmp_path):
+        """The instrumented farm campaign lands bit-identical results to
+        the uninstrumented one under the same fault map — observability
+        must never change what was measured."""
+        curves = []
+        for obs in (None, str(tmp_path / "obs")):
+            fi = _injector("process", crash=0.08, seed=13)
+            ex = MeasurementExecutor(workers=4, backend="process",
+                                     retries=0, measure_fn=fi)
+            try:
+                curves.append(run_campaign(
+                    CAMPAIGN_JOBS, _tiny_cfg(), strategy="ansor-random",
+                    trials_per_task=16, executor=ex, obs=obs).curve())
+            finally:
+                ex.shutdown()
+        assert curves[0] == curves[1]
