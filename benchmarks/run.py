@@ -87,6 +87,14 @@ def write_bench_json(suite: str, metrics: dict, timestamp=None,
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
+    # append-only history: every run adds one line, so
+    # `launch.obs --diff` can flag per-suite metric regressions across runs
+    hist = os.path.join(REPO_ROOT, "artifacts", "bench_history.jsonl")
+    os.makedirs(os.path.dirname(hist), exist_ok=True)
+    with open(hist, "a") as f:
+        json.dump({**payload, "recorded_at": time.time()}, f,
+                  sort_keys=True)
+        f.write("\n")
     print(f"# wrote {path}")
     return path
 

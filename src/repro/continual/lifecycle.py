@@ -193,10 +193,18 @@ class ModelLifecycle:
             status = "stale"
         else:
             status = "fresh"
+        shift = by_kind[FINGERPRINT].value
+        rank = (by_kind[CALIBRATION].value
+                if CALIBRATION in by_kind else float("nan"))
+        from repro.obs import metrics as obs_metrics
+        reg = obs_metrics.current()
+        if shift == shift:  # skip NaN — a gauge of NaN hides history
+            reg.gauge("continual.fingerprint_shift", device=device).set(shift)
+        if rank == rank:
+            reg.gauge("continual.rank_accuracy", device=device).set(rank)
         return {"device": device, "status": status, "version": version,
-                "fingerprint_shift": by_kind[FINGERPRINT].value,
-                "rank_accuracy": by_kind[CALIBRATION].value
-                if CALIBRATION in by_kind else float("nan"),
+                "fingerprint_shift": shift,
+                "rank_accuracy": rank,
                 "reports": reports}
 
     def status(self, device: str) -> str:

@@ -92,6 +92,12 @@ class _ReaderState:
             "serve.latency_seconds", path="hit"))
         self.miss_latency = LatencyWindow(histogram=self.metrics.histogram(
             "serve.latency_seconds", path="miss"))
+        self._requests = self.metrics.counter("serve.requests")
+        self._errors = self.metrics.counter("serve.errors")
+        self._cache_hits = self.metrics.counter("serve.cache_lookups",
+                                                result="hit")
+        self._cache_misses = self.metrics.counter("serve.cache_lookups",
+                                                  result="miss")
         self.served = 0
         self.tunes_forwarded = 0
         self._lock = threading.Lock()       # counters only
@@ -143,24 +149,41 @@ class _ReaderState:
                     "hit": self.hit_latency.summary(),
                     "miss": self.miss_latency.summary(),
                     "metrics": self.metrics.to_json()}
+        if op == "metrics":
+            # the scrape op: the raw mergeable snapshot, so the parent
+            # folds every reader into ONE exposition (exact histograms).
+            # The handling cost (CPU, not wall — the connection may queue
+            # behind client traffic, which is serving time, not scraping
+            # time) is observed AFTER the snapshot, so it rides the NEXT
+            # scrape; the bench's overhead gate sums these totals.
+            c0 = time.thread_time()
+            snap = self.metrics.snapshot()
+            self.metrics.histogram("serve.scrape_seconds",
+                                   side="reader").observe(
+                time.thread_time() - c0)
+            return {"ok": True, "rid": self.rid, "snapshot": snap}
         if op != "get_config":
+            self._errors.inc()
             return {"ok": False, "error": f"unknown op {op!r}"}
 
         t0 = time.perf_counter()
         device = req["device"]
         wl = protocol.workload_from_wire(req["workload"])
         key = wl.key()
+        self._requests.inc()
         with self._lock:
             self.served += 1
 
         cached = self.cache.get(device, key)
         if cached is not None:
             cfg, thr = cached
+            self._cache_hits.inc()
             self.hit_latency.record(time.perf_counter() - t0)
             return {"ok": True, "rid": self.rid, "cache_hit": True,
                     "source": "cache", "knobs": protocol.config_to_wire(cfg),
                     "throughput_gflops": thr}
 
+        self._cache_misses.inc()
         # a registry file that moved on disk means the writer landed new
         # winners: reload AND drop the local LRU (the cross-process
         # equivalent of the hub's registry-write invalidation hook)
@@ -226,6 +249,7 @@ def _serve_conn(state: _ReaderState, client: socket.socket) -> None:
             except Exception as e:  # noqa: BLE001 — a bad request must not
                 reply = {"ok": False,           # take the reader down
                          "error": f"{type(e).__name__}: {e}"}
+                state.metrics.counter("serve.errors").inc()
             try:
                 protocol.send_frame(client, reply)
             except OSError:
@@ -307,7 +331,9 @@ class HubServer:
     def __init__(self, root: str, hub=None, readers: int = 2,
                  tune_on_miss: bool = True,
                  heartbeat_s: float = 0.2, hb_grace_s: float = 5.0,
-                 boot_timeout_s: float = 60.0):
+                 boot_timeout_s: float = 60.0,
+                 monitor: bool = True, monitor_interval_s: float = 1.0,
+                 slos=None):
         self.root = root
         if hub is None:
             from repro.hub.service import TuningHub
@@ -321,6 +347,20 @@ class HubServer:
         self.hb_grace_s = hb_grace_s
         self.boot_timeout_s = boot_timeout_s
         self.respawns = 0
+        self._respawns_by_reader: Dict[str, int] = {}
+        # parent-side registry: respawn counters, liveness gauges, scrape
+        # cost. Shares the hub's registry when it has one (so hub.* and
+        # serve.* land in one exposition); a bare serve-only shim gets a
+        # private one.
+        self.metrics = getattr(hub, "metrics", None)
+        if not isinstance(self.metrics, MetricsRegistry):
+            self.metrics = MetricsRegistry()
+        self.monitor = bool(monitor)
+        self.monitor_interval_s = float(monitor_interval_s)
+        self._slos = slos
+        self.sampler = None                 # TimeSeriesSampler when started
+        self.slo = None                     # SLOEvaluator when started
+        self._t0_wall = time.time()
         self._ctx = mp.get_context("spawn")
         self._readers: List[_Reader] = []
         self._next_rid = 0
@@ -344,10 +384,12 @@ class HubServer:
                              daemon=True).start()
 
     def _writer_conn(self, client: socket.socket) -> None:
-        """One funneled connection from a reader: run the hub's full miss
-        path (queue -> batched tune -> registry write) and reply the
-        winner. The hub's own device locks + in-flight dedup make
-        concurrent identical requests collapse to one job."""
+        """One connection on the writer socket. Readers funnel `tune`
+        requests here (queue -> batched tune -> registry write; the hub's
+        device locks + in-flight dedup collapse concurrent identical
+        requests into one job); monitoring clients hit the same socket
+        with `metrics` (the merged reader+writer exposition) and `health`
+        (liveness + respawn payload from the heartbeat watchdog)."""
         with client:
             while True:
                 try:
@@ -357,9 +399,14 @@ class HubServer:
                 if req is None:
                     return
                 try:
-                    if req.get("op") != "tune":
+                    op = req.get("op")
+                    if op == "metrics":
+                        reply = self._metrics_reply()
+                    elif op == "health":
+                        reply = self._health_reply()
+                    elif op != "tune":
                         reply = {"ok": False,
-                                 "error": f"writer got {req.get('op')!r}"}
+                                 "error": f"writer got {op!r}"}
                     else:
                         wl = protocol.workload_from_wire(req["workload"])
                         resp = self.hub.get_config(req["device"], wl)
@@ -376,6 +423,90 @@ class HubServer:
                     protocol.send_frame(client, reply)
                 except OSError:
                     return
+
+    # --- monitoring: scrape + health -------------------------------------
+    def _scrape_snapshot(self) -> Dict[str, Any]:
+        """One merged snapshot of everything observable from the parent:
+        the process registry (drift gauges et al.), the parent/hub
+        registry (hub.* counters, respawns, scrape cost), and every live
+        reader's registry fetched over its own RPC `metrics` op. Readers
+        stay jax-free; the parent does the merging."""
+        from repro.obs import metrics as obs_metrics
+        t0 = time.perf_counter()
+        c0 = time.thread_time()
+        with self._lock:
+            readers = [(r.rid, r.port, r.proc.is_alive())
+                       for r in self._readers]
+        self.metrics.gauge("serve.readers_alive").set(
+            sum(1 for _, _, alive in readers if alive))
+        self.metrics.gauge("serve.readers_total").set(len(readers))
+        reg = MetricsRegistry()
+        default = obs_metrics.default_registry()
+        reg.merge(default.snapshot())
+        if self.metrics is not default:
+            reg.merge(self.metrics.snapshot())
+        for rid, port, alive in readers:
+            if not alive:
+                continue
+            try:
+                with socket.create_connection(("127.0.0.1", port),
+                                              timeout=2.0) as s:
+                    protocol.send_frame(s, {"op": "metrics"})
+                    reply = protocol.recv_frame(s)
+            except (OSError, protocol.ProtocolError):
+                reply = None
+            if reply and reply.get("ok"):
+                reg.merge(reply["snapshot"])
+            else:
+                self.metrics.counter("serve.scrape_errors",
+                                     reader=str(rid)).inc()
+        # the cost of THIS scrape lands in the registry for the next one.
+        # `serve.scrape_seconds` is CPU (thread time): what monitoring
+        # actually consumes — the bench's overhead gate sums its totals
+        # (side=parent here + side=reader shipped in reader snapshots).
+        # Wall time (which under load is mostly waiting behind client
+        # traffic for a reader to answer) lands separately.
+        self.metrics.histogram("serve.scrape_seconds",
+                               side="parent").observe(
+            time.thread_time() - c0)
+        self.metrics.histogram("serve.scrape_wall_seconds").observe(
+            time.perf_counter() - t0)
+        return reg.snapshot()
+
+    def _metrics_reply(self) -> Dict[str, Any]:
+        snap = self._scrape_snapshot()
+        reg = MetricsRegistry()
+        reg.merge(snap)
+        reply: Dict[str, Any] = {"ok": True, "snapshot": snap,
+                                 "text": reg.to_text(),
+                                 "uptime_s": time.time() - self._t0_wall,
+                                 "slo": [], "alerts": [], "rates": {}}
+        if self.slo is not None:
+            reply["slo"] = [st.to_dict() for st in self.slo.statuses]
+            reply["alerts"] = list(self.slo.alerts[-10:])
+        if self.sampler is not None:
+            qps = self.sampler.rate("serve.requests", 30.0)
+            reply["rates"] = {"qps_30s": None if qps != qps else qps,
+                              "window_s": 30.0}
+        return reply
+
+    def _health_reply(self) -> Dict[str, Any]:
+        now = time.monotonic()
+        with self._lock:
+            rows = [{"rid": r.rid, "port": r.port,
+                     "alive": r.proc.is_alive(),
+                     "last_beat_age_s": round(now - r.last_beat, 3)}
+                    for r in self._readers]
+            respawns_by = dict(self._respawns_by_reader)
+        return {"ok": True, "uptime_s": time.time() - self._t0_wall,
+                "writer_port": self.writer_port,
+                "readers": rows,
+                "alive": sum(1 for r in rows if r["alive"]),
+                "total": len(rows),
+                "respawns": self.respawns,
+                "respawns_by_reader": respawns_by,
+                "monitor": self.sampler is not None,
+                "slo_firing": self.slo.firing() if self.slo else []}
 
     # --- reader farm ------------------------------------------------------
     def _spawn_reader(self) -> _Reader:
@@ -442,6 +573,11 @@ class HubServer:
                     r.conn.close()
                     log.warning("reader died; respawning", rid=r.rid)
                     self.respawns += 1
+                    rid = str(r.rid)
+                    self._respawns_by_reader[rid] = \
+                        self._respawns_by_reader.get(rid, 0) + 1
+                    self.metrics.counter("serve.reader_respawns",
+                                         reader=rid).inc()
                     self._readers[i] = self._spawn_reader()
                     replaced = True
             if replaced:
@@ -471,6 +607,19 @@ class HubServer:
             t = threading.Thread(target=target, name=name, daemon=True)
             t.start()
             self._threads.append(t)
+        if self.monitor:
+            from repro.obs.slo import SLOEvaluator, default_serving_slos
+            from repro.obs.timeseries import TimeSeriesSampler
+            self.sampler = TimeSeriesSampler(
+                source=self._scrape_snapshot,
+                interval_s=self.monitor_interval_s,
+                on_sample=lambda t_, snap: (
+                    self.slo.evaluate(now=t_) if self.slo else None))
+            self.slo = SLOEvaluator(
+                self._slos if self._slos is not None
+                else default_serving_slos(),
+                self.sampler, logger=log, registry=self.metrics)
+            self.sampler.start()
         self._started = True
         return self
 
@@ -507,6 +656,8 @@ class HubServer:
     def shutdown(self) -> None:
         if not self._started:
             return
+        if self.sampler is not None:
+            self.sampler.stop()
         self._stop.set()
         for t in self._threads:
             t.join(5.0)

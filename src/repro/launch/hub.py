@@ -360,6 +360,20 @@ def _print_serving_stats(root: str, hub) -> None:
     from repro.hub.serving.server import endpoints_path
     if not os.path.exists(endpoints_path(root)):
         return
+    try:
+        from repro.launch.obs import _writer_call
+        health = _writer_call(root, "health", timeout_s=2.0)
+    except (OSError, ValueError, ConnectionError):
+        health = None
+    if health and health.get("ok"):
+        by_reader = health.get("respawns_by_reader") or {}
+        detail = (" (" + ", ".join(f"rid {k}: {v}"
+                                   for k, v in sorted(by_reader.items()))
+                  + ")") if by_reader else ""
+        print(f"farm health: {health.get('alive')}/{health.get('total')} "
+              f"alive, respawns={health.get('respawns', 0)}{detail}, "
+              f"monitor={'on' if health.get('monitor') else 'off'}, "
+              f"slo-firing={health.get('slo_firing') or 'none'}")
     from repro.hub import HubClient
     try:
         with HubClient(root=root) as c:

@@ -1,9 +1,12 @@
-"""Observability CLI: inspect, validate, and diff campaign flight records.
+"""Observability CLI: flight records, live serving watch, bench history.
 
     PYTHONPATH=src python -m repro.launch.obs --summarize DIR
     PYTHONPATH=src python -m repro.launch.obs --check DIR
     PYTHONPATH=src python -m repro.launch.obs --export DIR [--out PATH]
     PYTHONPATH=src python -m repro.launch.obs --diff DIR_A DIR_B
+    PYTHONPATH=src python -m repro.launch.obs --watch [--root DIR]
+    PYTHONPATH=src python -m repro.launch.obs --watch --once [--check]
+    PYTHONPATH=src python -m repro.launch.obs --diff   (bench history)
 
 `DIR` is a flight-recorder artifact directory (containing `events.jsonl` +
 `campaign.trace.json`, e.g. the path passed to `run_campaign(obs=...)` or
@@ -12,26 +15,42 @@
 --summarize   attribute campaign wall time to the span taxonomy (measure /
               update / search / finish / overhead), report queue-wait
               percentiles and top counters.
---check       validate the artifacts (every events.jsonl line parses, the
-              span tree is non-empty, single-rooted, orphan-free, every
-              span closed ok|error); exit non-zero on any problem — the CI
-              obs smoke gate.
+--check DIR   validate flight-record artifacts (every events.jsonl line
+              parses, the span tree is non-empty, single-rooted,
+              orphan-free, every span closed ok|error); exit non-zero on
+              any problem — the CI obs smoke gate.
 --export      rewrite the merged span timeline as a standalone Chrome-trace
               JSON (open in chrome://tracing or https://ui.perfetto.dev).
---diff        compare two runs' summaries and final metrics side by side.
+--diff A B    compare two flight records side by side.
+--diff        with no operands: compare the latest two entries per suite in
+              the bench history (``artifacts/bench_history.jsonl``, written
+              by ``benchmarks.run``) and flag metric regressions.
+--watch       live terminal view of a `launch.hub --serve` farm: polls the
+              writer's `metrics`/`health` ops every --interval seconds and
+              renders QPS, latency percentiles, cache hit rate, SLO status,
+              and recent alerts. `--once` prints a single frame; adding
+              bare `--check` turns that frame into a gate (well-formed
+              exposition, >=1 reader alive, zero firing SLOs) that retries
+              until the farm answers or --timeout expires — the CI
+              monitoring smoke leg.
 
-Jax-free: runs anywhere the artifacts are readable.
+Jax-free: runs anywhere the artifacts (or the serving sockets) are
+reachable.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import socket
 import sys
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
-from repro.obs import to_chrome_trace, validate_events
+from repro.obs import MetricsRegistry, to_chrome_trace, validate_events
+from repro.obs.metrics import hist_percentile
 from repro.obs.recorder import (load_events, load_trace, summarize_trace)
+from repro.obs.timeseries import _key_matches, merge_hist_states
 
 
 def _final_metrics(events: List[Dict]) -> Optional[Dict]:
@@ -169,31 +188,279 @@ def diff(path_a: str, path_b: str) -> int:
     return 0
 
 
+# ---------------------------------------------------------------------------
+# Live serving watch (scrapes the writer's metrics/health ops)
+# ---------------------------------------------------------------------------
+
+
+def _writer_call(root: str, op: str, timeout_s: float = 5.0) -> Dict[str, Any]:
+    """One framed request to the serving parent's writer socket."""
+    from repro.hub.serving import protocol
+    from repro.hub.serving.server import endpoints_path
+    with open(endpoints_path(root)) as f:
+        data = json.load(f)
+    port = data.get("writer_port")
+    if not port:
+        raise ConnectionError(f"no writer_port in {endpoints_path(root)}")
+    with socket.create_connection((data.get("host", "127.0.0.1"), int(port)),
+                                  timeout=timeout_s) as s:
+        protocol.send_frame(s, {"op": op})
+        reply = protocol.recv_frame(s)
+    if not reply:
+        raise ConnectionError(f"writer hung up on op={op}")
+    return reply
+
+
+def scrape(root: str, timeout_s: float = 5.0) -> Tuple[Dict, Dict]:
+    """(metrics reply, health reply) from a running serving farm."""
+    return (_writer_call(root, "metrics", timeout_s),
+            _writer_call(root, "health", timeout_s))
+
+
+def _snapshot_percentile(snap: Dict, prefix: str, p: float) -> float:
+    states = [st for key, st in snap.get("histograms", {}).items()
+              if _key_matches(key, prefix)]
+    merged = merge_hist_states(states)
+    if merged is None or not merged.get("count"):
+        return float("nan")
+    return hist_percentile(merged, p)
+
+
+def _counter_sum(snap: Dict, prefix: str) -> float:
+    return sum(v for key, v in snap.get("counters", {}).items()
+               if _key_matches(key, prefix))
+
+
+def _fmt_ms(v: float) -> str:
+    return "-" if v != v else f"{v * 1e3:.2f}ms"
+
+
+def render_watch(metrics: Dict, health: Dict) -> str:
+    """One text frame of farm state from the two scrape payloads."""
+    snap = metrics.get("snapshot", {})
+    lines: List[str] = []
+    lines.append(
+        f"hub serving  uptime={health.get('uptime_s', 0.0):.1f}s  "
+        f"readers={health.get('alive', 0)}/{health.get('total', 0)} alive  "
+        f"respawns={health.get('respawns', 0)}  "
+        f"monitor={'on' if health.get('monitor') else 'off'}")
+    qps = (metrics.get("rates") or {}).get("qps_30s")
+    hits = sum(v for k, v in snap.get("counters", {}).items()
+               if k.startswith("serve.cache_lookups") and "result=hit" in k)
+    misses = sum(v for k, v in snap.get("counters", {}).items()
+                 if k.startswith("serve.cache_lookups") and "result=miss" in k)
+    total_lk = hits + misses
+    hit_rate = f"{100.0 * hits / total_lk:.1f}%" if total_lk else "-"
+    lines.append(
+        f"  qps(30s)={qps:.2f}  " if isinstance(qps, (int, float))
+        else "  qps(30s)=-  ")
+    lines[-1] += (
+        f"requests={_counter_sum(snap, 'serve.requests'):.0f}  "
+        f"errors={_counter_sum(snap, 'serve.errors'):.0f}  "
+        f"cache_hit={hit_rate}")
+    p50 = _snapshot_percentile(snap, "serve.latency_seconds", 50)
+    p99 = _snapshot_percentile(snap, "serve.latency_seconds", 99)
+    lines.append(f"  latency p50={_fmt_ms(p50)} p99={_fmt_ms(p99)}")
+    slo_rows = metrics.get("slo") or []
+    if slo_rows:
+        cells = []
+        for st in slo_rows:
+            mark = {"ok": "ok", "firing": "FIRING",
+                    "no_data": "no-data"}.get(st.get("state"), "?")
+            cells.append(f"{st.get('name')}={mark}")
+        lines.append("  SLO: " + "  ".join(cells))
+    alerts = metrics.get("alerts") or []
+    for a in alerts[-3:]:
+        lines.append(f"  alert: {a.get('slo')} -> {a.get('state')} "
+                     f"(fast={a.get('value_fast')}, "
+                     f"slow={a.get('value_slow')}, "
+                     f"threshold={a.get('threshold')})")
+    for rrow in health.get("readers", []):
+        lines.append(
+            f"  reader rid={rrow.get('rid')} port={rrow.get('port')} "
+            f"alive={rrow.get('alive')} "
+            f"beat_age={rrow.get('last_beat_age_s')}s")
+    return "\n".join(lines)
+
+
+def check_serving(metrics: Dict, health: Dict) -> List[str]:
+    """Gate conditions for `--watch --once --check`."""
+    problems: List[str] = []
+    if not metrics.get("ok"):
+        problems.append(f"metrics op not ok: {metrics.get('error')}")
+    if not health.get("ok"):
+        problems.append(f"health op not ok: {health.get('error')}")
+    snap = metrics.get("snapshot")
+    if not isinstance(snap, dict):
+        problems.append("metrics reply carries no snapshot")
+    else:
+        try:
+            reg = MetricsRegistry()
+            reg.merge(snap)
+            text = reg.to_text()
+            if not text.strip():
+                problems.append("text exposition is empty")
+            for line in text.splitlines():
+                if len(line.rsplit(" ", 1)) != 2:
+                    problems.append(f"malformed exposition line: {line!r}")
+        except Exception as e:  # merge must round-trip cleanly
+            problems.append(f"snapshot does not merge: {e!r}")
+    if not (metrics.get("text") or "").strip():
+        problems.append("metrics reply carries no text exposition")
+    if health.get("alive", 0) < 1:
+        problems.append("no reader alive")
+    firing = [st for st in metrics.get("slo") or []
+              if st.get("state") == "firing"]
+    for st in firing:
+        problems.append(f"SLO firing: {st.get('name')} "
+                        f"(fast={st.get('value_fast')}, "
+                        f"threshold={st.get('threshold')})")
+    return problems
+
+
+def watch(root: str, interval: float = 2.0, once: bool = False,
+          gate: bool = False, timeout: float = 30.0) -> int:
+    """Poll the farm and render frames; with once+gate, retry until the
+    first successful scrape (or timeout), then exit 0/1 on the gate."""
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            metrics, health = scrape(root)
+        except (OSError, ValueError, ConnectionError) as e:
+            if once and time.monotonic() < deadline:
+                time.sleep(0.5)
+                continue
+            print(f"[obs] watch: cannot scrape {root}: {e}",
+                  file=sys.stderr)
+            return 1
+        print(render_watch(metrics, health), flush=True)
+        if gate:
+            problems = check_serving(metrics, health)
+            if problems:
+                for p in problems:
+                    print(f"[obs] WATCH CHECK FAIL: {p}", file=sys.stderr)
+                return 1
+            print("[obs] watch check OK")
+            return 0
+        if once:
+            return 0
+        time.sleep(interval)
+
+
+# ---------------------------------------------------------------------------
+# Bench-history diff
+# ---------------------------------------------------------------------------
+
+_LOWER_IS_BETTER = ("_us", "_ms", "p50", "p99", "latency", "seconds",
+                    "errors", "rejects", "overhead")
+
+
+def _metric_direction(name: str) -> int:
+    """-1 if lower is better, +1 if higher is better (QPS, hit rates)."""
+    low = name.lower()
+    return -1 if any(tok in low for tok in _LOWER_IS_BETTER) else 1
+
+
+def diff_bench_history(history: str, suite: Optional[str] = None,
+                       tolerance_pct: float = 5.0) -> int:
+    """Compare the latest two history entries per suite; flag any metric
+    more than `tolerance_pct` worse (direction from the metric name)."""
+    try:
+        with open(history) as f:
+            rows = [json.loads(line) for line in f if line.strip()]
+    except OSError as e:
+        print(f"[obs] no bench history at {history}: {e}", file=sys.stderr)
+        return 1
+    by_suite: Dict[str, List[Dict]] = {}
+    for r in rows:
+        by_suite.setdefault(r.get("suite", "?"), []).append(r)
+    suites = [suite] if suite else sorted(by_suite)
+    rc = 0
+    for s in suites:
+        entries = by_suite.get(s, [])
+        if len(entries) < 2:
+            print(f"# {s}: {len(entries)} history entr"
+                  f"{'y' if len(entries) == 1 else 'ies'} — nothing to diff")
+            continue
+        prev, cur = entries[-2], entries[-1]
+        pm = {m["metric"]: m["value"] for m in prev.get("metrics", [])}
+        cm = {m["metric"]: m["value"] for m in cur.get("metrics", [])}
+        print(f"# {s}: {prev.get('timestamp') or 'prev'} -> "
+              f"{cur.get('timestamp') or 'latest'}")
+        for name in sorted(set(pm) | set(cm)):
+            a, b = pm.get(name), cm.get(name)
+            if not isinstance(a, (int, float)) or \
+                    not isinstance(b, (int, float)):
+                continue
+            delta_pct = (100.0 * (b - a) / abs(a)) if a else 0.0
+            worse = -_metric_direction(name) * delta_pct > tolerance_pct
+            flag = "  REGRESSION" if worse else ""
+            print(f"  {name:40s} {a:>12.4g} {b:>12.4g} "
+                  f"{delta_pct:+8.1f}%{flag}")
+            if worse:
+                rc = 1
+    return rc
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--summarize", metavar="DIR",
                     help="print the wall-time attribution summary")
-    ap.add_argument("--check", metavar="DIR",
-                    help="validate artifacts; non-zero exit on problems")
+    ap.add_argument("--check", nargs="?", const=True, metavar="DIR",
+                    help="validate flight-record artifacts (with DIR), or "
+                         "gate a --watch frame (bare, with --watch)")
     ap.add_argument("--export", metavar="DIR",
                     help="write a standalone Chrome-trace JSON")
     ap.add_argument("--out", default=None,
                     help="output path for --export")
-    ap.add_argument("--diff", nargs=2, metavar=("DIR_A", "DIR_B"),
-                    help="compare two flight records")
+    ap.add_argument("--diff", nargs="*", metavar="DIR",
+                    help="compare two flight records (two operands) or the "
+                         "latest two bench-history entries (no operands)")
+    ap.add_argument("--watch", action="store_true",
+                    help="live view of a running `launch.hub --serve` farm")
+    ap.add_argument("--once", action="store_true",
+                    help="render a single --watch frame and exit")
+    ap.add_argument("--root", default="artifacts/hub",
+                    help="hub root for --watch (endpoints.json lives under "
+                         "<root>/serving/)")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="--watch poll interval, seconds")
+    ap.add_argument("--timeout", type=float, default=30.0,
+                    help="--watch --once: wait up to this long for the "
+                         "farm's first successful scrape")
+    ap.add_argument("--history", default="artifacts/bench_history.jsonl",
+                    help="bench history file for bare --diff")
+    ap.add_argument("--suite", default=None,
+                    help="restrict bare --diff to one suite")
     args = ap.parse_args(argv)
 
-    if not any((args.summarize, args.check, args.export, args.diff)):
-        ap.error("pass --summarize, --check, --export, or --diff")
+    flight_check = args.check if isinstance(args.check, str) else None
+    watch_gate = args.check is True
+    if watch_gate and not args.watch:
+        ap.error("bare --check gates a --watch frame; pass --watch "
+                 "(or give --check a flight-record DIR)")
+    if not any((args.summarize, flight_check, args.export,
+                args.diff is not None, args.watch)):
+        ap.error("pass --summarize, --check, --export, --diff, or --watch")
     rc = 0
-    if args.check:
-        rc = max(rc, check(args.check))
+    if flight_check:
+        rc = max(rc, check(flight_check))
     if args.summarize:
         rc = max(rc, print_summary(args.summarize))
     if args.export:
         rc = max(rc, export(args.export, args.out))
-    if args.diff:
-        rc = max(rc, diff(args.diff[0], args.diff[1]))
+    if args.diff is not None:
+        if len(args.diff) == 2:
+            rc = max(rc, diff(args.diff[0], args.diff[1]))
+        elif len(args.diff) == 0:
+            rc = max(rc, diff_bench_history(args.history, suite=args.suite))
+        else:
+            ap.error("--diff takes two flight-record DIRs or no operands "
+                     "(bench history)")
+    if args.watch:
+        rc = max(rc, watch(args.root, interval=args.interval,
+                           once=args.once or watch_gate, gate=watch_gate,
+                           timeout=args.timeout))
     return rc
 
 

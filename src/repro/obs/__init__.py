@@ -15,14 +15,29 @@ import from here. Three layers:
   * `repro.obs.recorder` — `FlightRecorder` ties both to per-campaign
     artifacts: append-only `events.jsonl` + `campaign.trace.json`.
 
+On top of those, the always-on monitoring layer for long-running serving:
+
+  * `repro.obs.timeseries` — `TimeSeriesSampler` snapshots a registry at
+    a fixed interval into a bounded ring; windowed rate/percentile
+    queries are reset-safe deltas between ring entries.
+  * `repro.obs.slo` — declarative `SLOSpec`s evaluated with fast/slow
+    multi-window burn rates and hysteresis (`SLOEvaluator`), emitting
+    de-flapped alert transitions into the logger (and thus any active
+    recorder).
+
 Plus `get_logger` (obs.logging): the structured `[name] msg key=value`
 status logger that replaced the stack's ad-hoc prints
-(`REPRO_LOG_LEVEL`-controlled, quiet under pytest).
+(`REPRO_LOG_LEVEL`-controlled, quiet under pytest; `REPRO_LOG_JSON=1`
+switches stderr to one-JSON-object-per-line with identical fields).
 """
 from repro.obs.logging import get_logger
 from repro.obs.metrics import (Counter, Gauge, Histogram, LatencyWindow,
                                MetricsRegistry)
 from repro.obs.recorder import FlightRecorder, summarize_trace
+from repro.obs.slo import (SLOEvaluator, SLOSpec, SLOStatus,
+                           default_serving_slos)
+from repro.obs.timeseries import (TimeSeriesSampler, WindowDelta,
+                                  reset_safe_delta)
 from repro.obs.trace import (SpanContext, Tracer, current_context,
                              remote_event, span, to_chrome_trace,
                              validate_events)
@@ -33,4 +48,6 @@ __all__ = [
     "FlightRecorder", "summarize_trace", "SpanContext", "Tracer",
     "current_context", "remote_event", "span", "to_chrome_trace",
     "validate_events", "get_logger", "metrics", "trace",
+    "TimeSeriesSampler", "WindowDelta", "reset_safe_delta",
+    "SLOEvaluator", "SLOSpec", "SLOStatus", "default_serving_slos",
 ]

@@ -11,15 +11,22 @@ is ``info`` — except under pytest (``PYTEST_CURRENT_TEST`` set), where it
 is ``warning`` so test output stays clean without every test muting the
 stack. Lines go to stderr, keeping stdout for data (CSV, tables, JSON).
 
+``REPRO_LOG_JSON=1`` switches the stderr format to one JSON object per
+line (``{"t": ..., "level": ..., "logger": ..., "msg": ..., <fields>}``)
+carrying the same fields as the human format — for log shippers and
+``--watch``-style tooling that wants machine-parseable status.
+
 Sinks: a `FlightRecorder` (or any callable) can attach via `add_sink` to
 mirror warning+ lines into `events.jsonl`, so a campaign's artifact also
 records what went wrong, not just what was measured.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import threading
+import time
 from typing import Callable, Dict, List
 
 LEVELS: Dict[str, int] = {"debug": 10, "info": 20, "warning": 30,
@@ -78,6 +85,16 @@ class Logger:
                 except Exception:       # a broken sink must not mute stderr
                     pass
         if num < threshold():
+            return
+        if os.environ.get("REPRO_LOG_JSON", "").strip().lower() in (
+                "1", "true", "yes"):
+            rec: Dict[str, object] = {"t": round(time.time(), 6),
+                                      "level": level, "logger": self.name,
+                                      "msg": msg}
+            for k, v in fields.items():
+                rec[k] = v if isinstance(v, (str, int, float, bool)) \
+                    or v is None else str(v)
+            print(json.dumps(rec), file=sys.stderr, flush=True)
             return
         kv = " ".join(f"{k}={_fmt_value(v)}" for k, v in fields.items())
         tag = "" if level == "info" else f" {level.upper()}:"

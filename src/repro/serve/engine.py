@@ -4,10 +4,19 @@ Continuous-batching-lite: a fixed pool of batch slots; finished sequences
 (EOS or budget) free their slot and queued requests are admitted at the next
 prefill boundary. Per-slot positions (`cur` is per-sequence) make mixed-age
 batches correct.
+
+Observability: every wave records prefill and per-step decode wall time
+into the active metrics registry (`serve.engine.prefill_seconds`,
+`serve.engine.step_seconds`, `serve.engine.tokens`); with
+`profile_kernels=True` the first `generate()` additionally runs the
+tuned-vs-default kernel probe (`kernels.profile`) for the engine's model
+shapes, so one decode run leaves per-kernel timing histograms for all
+three Pallas kernels.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -15,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.obs import metrics as obs_metrics
 from repro.train.train_loop import make_serve_prefill, make_serve_step
 
 
@@ -31,13 +41,17 @@ class Request:
 class Engine:
     def __init__(self, model: Model, params, mesh, max_len: int = 512,
                  batch_slots: int = 8, distributed_cache: bool = False,
-                 extra_batch: Optional[Dict[str, Any]] = None, seed: int = 0):
+                 extra_batch: Optional[Dict[str, Any]] = None, seed: int = 0,
+                 device: str = "tpu_v5e", profile_kernels: bool = False):
         self.model = model
         self.params = params
         self.mesh = mesh
         self.max_len = max_len
         self.batch_slots = batch_slots
         self.extra_batch = extra_batch or {}
+        self.device = device
+        self.profile_kernels = profile_kernels
+        self._profiled = False
         self._prefill = make_serve_prefill(model, mesh, max_len=max_len)
         self._step = make_serve_step(model, mesh,
                                      distributed_cache=distributed_cache)
@@ -53,6 +67,12 @@ class Engine:
 
     def generate(self, requests: Sequence[Request]) -> List[Request]:
         """Serves all requests (batched waves of up to batch_slots)."""
+        if self.profile_kernels and not self._profiled:
+            self._profiled = True
+            from repro.kernels.profile import (model_workloads,
+                                               profile_kernels)
+            profile_kernels(device=self.device,
+                            workloads=model_workloads(self.model.cfg))
         queue = list(requests)
         while queue:
             wave = queue[: self.batch_slots]
@@ -61,24 +81,34 @@ class Engine:
         return list(requests)
 
     def _run_wave(self, wave: List[Request]):
+        reg = obs_metrics.current()
+        prefill_hist = reg.histogram("serve.engine.prefill_seconds")
+        step_hist = reg.histogram("serve.engine.step_seconds")
+        tokens = reg.counter("serve.engine.tokens")
         B = len(wave)
         S = max(len(r.prompt) for r in wave)
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(wave):  # left-pad to a common length
             toks[i, S - len(r.prompt):] = r.prompt
         batch = {"tokens": jnp.asarray(toks), **self.extra_batch}
+        t0 = time.perf_counter()
         state, logits = self._prefill(self.params, batch)
         temps = np.array([r.temperature for r in wave], np.float32)
         next_tok = self._sample(logits, temps)
+        prefill_hist.observe(time.perf_counter() - t0)
         active = np.ones(B, bool)
         budget = np.array([r.max_new_tokens for r in wave])
         for i, r in enumerate(wave):
             r.out_tokens.append(int(next_tok[i]))
+        tokens.inc(B)
         n = 1
         while active.any() and n < budget.max():
+            t0 = time.perf_counter()
             state, logits = self._step(self.params, state,
                                        jnp.asarray(next_tok))
             next_tok = self._sample(logits, temps)
+            step_hist.observe(time.perf_counter() - t0)
+            tokens.inc(int(active.sum()))
             n += 1
             for i, r in enumerate(wave):
                 if not active[i]:

@@ -128,6 +128,8 @@ class LoopConfig:
     log_every: int = 10
     straggler_factor: float = 3.0   # step slower than factor*median -> warn
     straggler_window: int = 20
+    profile_kernels: bool = False   # run tuned-vs-default kernel probe once
+    device: str = "tpu_v5e"
 
 
 def run_training(model: Model, opt: AdamW, mesh: Mesh,
@@ -159,6 +161,13 @@ def run_training(model: Model, opt: AdamW, mesh: Mesh,
             train_state = init_train_state(
                 model, opt, mesh, rng if rng is not None else jax.random.PRNGKey(0))
 
+    if loop.profile_kernels:
+        from repro.kernels.profile import model_workloads, profile_kernels
+        profile_kernels(device=loop.device,
+                        workloads=model_workloads(model.cfg))
+
+    from repro.obs import metrics as obs_metrics
+    step_hist = obs_metrics.current().histogram("train.step_seconds")
     history = []
     times: list = []
     step = int(jax.device_get(train_state["step"]))
@@ -171,6 +180,7 @@ def run_training(model: Model, opt: AdamW, mesh: Mesh,
         train_state, metrics = step_fn(train_state, batch)
         metrics = jax.device_get(metrics)
         dt = time.perf_counter() - t0
+        step_hist.observe(dt)
         times.append(dt)
         if len(times) > loop.straggler_window:
             times.pop(0)
