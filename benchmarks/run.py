@@ -36,11 +36,24 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _git_sha() -> str:
+    """The commit these numbers were measured at, so bench-history diffs
+    (`launch.obs --diff`) can name commits, not just timestamps. Empty
+    string outside a git checkout."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except (OSError, subprocess.SubprocessError):
+        return ""
 
 
 def obs_delta_summary(before: dict, after: dict) -> dict:
@@ -75,10 +88,14 @@ def obs_delta_summary(before: dict, after: dict) -> dict:
 def write_bench_json(suite: str, metrics: dict, timestamp=None,
                      wall_seconds=None, obs=None) -> str:
     """Persist one suite's metrics as BENCH_<suite>.json at the repo root:
-    {suite, timestamp, metrics: [{metric, value}, ...], wall_seconds, obs}."""
+    {suite, timestamp, git_sha, metrics: [{metric, value}, ...],
+    wall_seconds, obs}."""
     payload = {"suite": suite, "timestamp": timestamp,
                "metrics": [{"metric": k, "value": v}
                            for k, v in sorted(metrics.items())]}
+    sha = _git_sha()
+    if sha:
+        payload["git_sha"] = sha
     if wall_seconds is not None:
         payload["wall_seconds"] = round(wall_seconds, 3)
     if obs:

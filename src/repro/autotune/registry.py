@@ -74,6 +74,18 @@ class Registry:
             entry = self._data.get(device, {}).get(wl.key())
             return dict(entry) if entry is not None else None
 
+    def entry(self, device: str, task_key: str) -> Optional[dict]:
+        """`lookup` by raw workload-key string — the introspection read path
+        (`explain`) has keys from provenance records, not Workloads."""
+        with _LOCK:
+            entry = self._data.get(device, {}).get(task_key)
+            return dict(entry) if entry is not None else None
+
+    def task_keys(self, device: str) -> list:
+        """All served workload keys for a device (sorted)."""
+        with _LOCK:
+            return sorted(self._data.get(device, {}))
+
     def get(self, device: str, wl: Workload) -> ProgramConfig:
         entry = self.lookup(device, wl)
         if entry is None:

@@ -67,6 +67,11 @@ class TuneResult:
     device: str
     tasks: List[TaskResult]
     total_search_seconds: float
+    # the adapted cost-model params at the end of the run (None for
+    # model-free strategies). The transfer-provenance layer compares these
+    # against the source ticket's params (lottery-mask overlap); they are
+    # NOT persisted with the result itself.
+    final_params: Optional[object] = None
 
     @property
     def model_latency(self) -> float:
@@ -96,12 +101,17 @@ def tune(
     model_update_cost: float = 2.0,
     cross_task: bool = False,
     cost_model: Union[str, CostModel, None] = None,
+    calibration=None,
 ) -> TuneResult:
     """Tune `tasks` on `device` under an adaptation `strategy`.
 
     `strategy` and `cost_model` accept registered names (back-compat: the
     five paper strategies and "mlp" resolve exactly as the old string API
     did) or instances for anything custom.
+
+    `calibration` (an `obs.CalibrationTracker`, optional) observes each
+    measured batch's predicted-vs-measured calibration. Pure observer:
+    passing one changes no tuning result.
     """
     strat = resolve_strategy(strategy)
     cm = resolve_cost_model(cost_model, moses_cfg.cost_model)
@@ -180,6 +190,12 @@ def tune(
                 traj.append(best_thr)
             search_s += sum(dev_mod.measurement_seconds(wl, c, device)
                             for c in cands)
+            if calibration is not None and strat.params is not None:
+                # strat.params still holds the model that scored this
+                # batch — on_round (below) is the only mutator.
+                # batched_predict is pure; the search RNG is untouched.
+                preds = cm.batched_predict(strat.params, feats)
+                calibration.observe_round(device, wl.key(), bi, preds, thr)
 
             # strategy hook: online model update on the incremental record
             # set (features were extracted once at measurement time; only
@@ -224,4 +240,4 @@ def tune(
             archive.append((workload_descriptor(wl), top4))
 
     return TuneResult(strategy_name(strat), device, task_results,
-                      total_search)
+                      total_search, final_params=strat.params)

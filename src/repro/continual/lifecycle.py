@@ -29,8 +29,11 @@ worse on the data that triggered it.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 import threading
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -96,6 +99,13 @@ class RefreshResult:
     n_mix: int = 0
     records_seen: int = 0
 
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        for k, v in d.items():
+            if isinstance(v, float) and math.isnan(v):
+                d[k] = None
+        return d
+
 
 class ModelLifecycle:
     """Drift-aware refresh/keep/retire decisions over a hub record store.
@@ -145,6 +155,50 @@ class ModelLifecycle:
         """The newest non-retired version for `device`, or None."""
         return self.store.load_model_params(device,
                                             model_name=self.model_name)
+
+    # --- decision log -----------------------------------------------------
+    # Every refresh attempt and drift decision lands in
+    # <store.root>/refresh_log.jsonl WITH the calibration evidence it was
+    # judged on (drift-report values, held-out rank accuracies), so
+    # `launch.obs --report` can answer "why did the serving model change"
+    # (or refuse to) long after the in-memory history is gone.
+    def _decision_path(self) -> str:
+        return os.path.join(self.store.root, "refresh_log.jsonl")
+
+    def _log_decision(self, kind: str, device: str,
+                      payload: Dict[str, Any]) -> None:
+        rec = {"t": round(time.time(), 3), "kind": kind, "device": device}
+        rec.update(payload)
+        path = self._decision_path()
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "a") as f:
+                f.write(json.dumps(rec, sort_keys=True) + "\n")
+        except OSError:
+            pass                    # evidence must never fail the decision
+
+    def decision_log(self, device: Optional[str] = None
+                     ) -> List[Dict[str, Any]]:
+        """The persisted decision records, oldest first (all devices, or
+        one). Tolerates a torn trailing line like every JSONL reader here."""
+        path = self._decision_path()
+        if not os.path.exists(path):
+            return []
+        with open(path) as f:
+            lines = f.read().splitlines()
+        out: List[Dict[str, Any]] = []
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    continue
+                raise
+            if device is None or rec.get("device") == device:
+                out.append(rec)
+        return out
 
     # --- drift + state ----------------------------------------------------
     def check(self, device: str, current_fingerprint=None,
@@ -257,6 +311,7 @@ class ModelLifecycle:
             accepted=str(result.accepted).lower()).inc()
         with self._lock:
             self.history.append(result)
+        self._log_decision("refresh", device, result.to_dict())
         return result
 
     def _refresh_locked(self, device: str, trigger: str, force: bool,
@@ -368,6 +423,13 @@ class ModelLifecycle:
         decision = self.decide(device, reports)
         obs_metrics.current().counter(
             "continual.drift_decisions", decision=decision).inc()
+        # the evidence the decision was made on, drift-report by detector
+        evidence = [{"kind": r.kind, "value": None if r.value != r.value
+                     else round(float(r.value), 6),
+                     "threshold": r.threshold, "drifted": r.drifted,
+                     "detail": r.detail} for r in reports]
+        self._log_decision("drift_decision", device,
+                           {"decision": decision, "evidence": evidence})
         if decision == "keep":
             return None
         if decision == "retire":
@@ -377,6 +439,7 @@ class ModelLifecycle:
                                    trigger="drift:fingerprint")
             with self._lock:
                 self.history.append(result)
+            self._log_decision("refresh", device, result.to_dict())
             return result
         drifted = ",".join(r.kind for r in reports if r.drifted)
         result = self.refresh(device, trigger=f"drift:{drifted}",

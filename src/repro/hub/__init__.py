@@ -10,6 +10,10 @@ Sits between the simulator/dataset layer and the tuning stack:
   transfer.py     source-selection policy: rank known devices by fingerprint
                   similarity, assemble a mixed weighted source pool +
                   pretrained cost-model params for an unseen target
+  provenance.py   TransferProvenance: the flight record attached to every
+                  tuned winner (sources + similarities + mixing weights,
+                  params lineage, lottery-ticket overlap, budget spent,
+                  calibration) — the `explain` op's payload
   service.py      TuningHub facade: get_config(device, workload) serves from
                   the tuned-config LRU cache / Registry on hit and schedules
                   batched TuneSession jobs on miss (in-flight dedup,
@@ -27,7 +31,12 @@ import importlib
 
 _EXPORTS = {
     "SCHEMA_VERSION": "repro.hub.store",
+    "COMPAT_SCHEMA_VERSIONS": "repro.hub.store",
     "RecordStore": "repro.hub.store",
+    "PROVENANCE_VERSION": "repro.hub.provenance",
+    "TransferProvenance": "repro.hub.provenance",
+    "build_provenance": "repro.hub.provenance",
+    "ticket_overlap": "repro.hub.provenance",
     "StoreSchemaError": "repro.hub.store",
     "workload_from_record": "repro.hub.store",
     "PROBE_VERSION": "repro.hub.fingerprint",

@@ -39,11 +39,13 @@ from repro.configs.moses import DEFAULT as DEFAULT_CFG
 from repro.configs.moses import MosesConfig
 from repro.core.cost_model import resolve_cost_model
 from repro.hub.fingerprint import device_fingerprint
+from repro.hub.provenance import build_provenance, ticket_overlap
 from repro.hub.serving.cache import LatencyWindow, TunedConfigCache
 from repro.hub.store import RecordStore
 from repro.hub.transfer import SourceSelection, select_sources
 from repro.obs import get_logger
 from repro.obs import trace as obs_trace
+from repro.obs.calibration import CalibrationTracker
 from repro.obs.metrics import MetricsRegistry
 
 log = get_logger("hub")
@@ -472,6 +474,11 @@ class TuningHub:
             registry=self.registry,
             store=self.store,
             cost_model=self.cost_model_name)
+        # introspection: this tracker observes the job's predicted-vs-
+        # measured calibration into the hub's own metrics registry (pure
+        # observer — results are bit-for-bit identical with it off), and its
+        # per-task summary rides along in each winner's provenance record
+        calib = CalibrationTracker(registry=self.metrics)
         if self.scheduler == "gradient":
             # several misses for one device become ONE scheduled campaign:
             # measurement rounds flow to whichever pending workload still
@@ -479,16 +486,62 @@ class TuningHub:
             result = session.run_many([(device, tasks)], strategy=strategy,
                                       scheduler="gradient",
                                       speculative=self.speculative,
-                                      executor=self.executor)[0]
+                                      executor=self.executor,
+                                      calibration=calib)[0]
         else:
-            result = session.run(tasks, device, strategy)
+            result = session.run(tasks, device, strategy, calibration=calib)
         with self._stats_lock:
             self.stats.jobs += 1
             self.stats.measurements += result.total_measurements
             self.stats.poisoned += sum(len(t.poisoned or [])
                                        for t in result.tasks)
+        self._record_provenance(device, sel, result, calib)
         self.registry.save()
         self.store.flush()
         if self.refresh != "off":
             self._schedule_refresh(device)
         return result
+
+    def _record_provenance(self, device: str, sel: SourceSelection,
+                           result, calib: CalibrationTracker) -> None:
+        """Persist a `TransferProvenance` record for every task this job
+        tuned — the hub's half of the `explain` contract: any winner the
+        registry serves can name its sources, params lineage, ticket
+        overlap, budget, and live calibration."""
+        lineage_dev = sel.params_device or device
+        try:
+            lineage = self.store.model_lineage(lineage_dev)
+        except Exception:  # noqa: BLE001 — provenance must not fail the job
+            lineage = []
+        params_version = None
+        if sel.params_device is not None:
+            try:
+                params_version = self.store.latest_model_version(
+                    sel.params_device, model_name=self.cost_model_name)
+            except Exception:  # noqa: BLE001
+                params_version = None
+        overlap = ticket_overlap(sel.pretrained_params,
+                                 getattr(result, "final_params", None),
+                                 ratio=self.moses_cfg.transferable_ratio)
+        for t in result.tasks:
+            prov = build_provenance(
+                t, device, result.strategy, sel=sel,
+                params_version=params_version,
+                lineage=lineage, mask_overlap=overlap,
+                trials_per_task=self.trials_per_task,
+                calibration=calib.per_task(device, t.workload.key()))
+            self.store.put_provenance(device, prov.to_dict())
+
+    # --- introspection ----------------------------------------------------
+    def explain(self, device: str, task_key: str) -> Optional[Dict[str, Any]]:
+        """The full story behind one served winner: its provenance record
+        (sources, lineage, ticket overlap, budget, calibration at tuning
+        time) joined with the registry entry it produced. None when the hub
+        never tuned (device, task). Served over RPC as the `explain` op and
+        rendered by `launch.obs --explain`."""
+        prov = self.store.get_provenance(device, task_key)
+        if prov is None:
+            return None
+        entry = self.registry.entry(device, task_key)
+        return {"device": device, "task": task_key,
+                "provenance": prov, "registry": entry}

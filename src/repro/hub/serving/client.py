@@ -144,6 +144,39 @@ class HubClient:
     def stats(self) -> Dict[str, Any]:
         return self._call({"op": "stats"}, self.timeout_s)
 
+    def _writer_call(self, req: Dict[str, Any],
+                     timeout_s: float) -> Dict[str, Any]:
+        """One request/reply against the WRITER socket (ops the readers do
+        not serve: explain, metrics, health). No failover — there is
+        exactly one writer; its port comes from the endpoints file."""
+        port = None
+        if self._file is not None:
+            try:
+                with open(self._file) as f:
+                    port = json.load(f).get("writer_port")
+            except (OSError, json.JSONDecodeError):
+                port = None
+        if not port:
+            raise ConnectionError("no writer endpoint published")
+        with socket.create_connection((self.host, int(port)),
+                                      timeout=timeout_s) as s:
+            protocol.send_frame(s, req)
+            reply = protocol.recv_frame(s)
+        if reply is None:
+            raise protocol.ProtocolError("writer hung up")
+        return reply
+
+    def explain(self, device: str, task_key: str) -> Dict[str, Any]:
+        """The provenance + registry story behind one served winner, from
+        the writer hub. Raises RuntimeError when the hub never tuned
+        (device, task_key)."""
+        reply = self._writer_call(
+            {"op": "explain", "device": device, "task": task_key},
+            self.timeout_s)
+        if not reply.get("ok"):
+            raise RuntimeError(f"explain failed: {reply.get('error')}")
+        return reply
+
     def get_config(self, device: str, wl, tune: bool = True) -> ServeResult:
         """Serve the best known config for (device, workload). `tune=False`
         never triggers measurements — a miss falls back to the store's best

@@ -84,7 +84,7 @@ def build_index(shard_path: str) -> Optional[ShardIndex]:
     `store._load_shard_file`: a torn trailing line is dropped, torn interior
     lines and unknown record schemas raise `StoreSchemaError`. None when the
     shard does not exist."""
-    from repro.hub.store import SCHEMA_VERSION, StoreSchemaError
+    from repro.hub.store import COMPAT_SCHEMA_VERSIONS, StoreSchemaError
     try:
         with open(shard_path, "rb") as f:
             data = f.read()
@@ -108,10 +108,10 @@ def build_index(shard_path: str) -> Optional[ShardIndex]:
                 continue        # torn trailing line: a writer died mid-append
             raise StoreSchemaError(
                 f"corrupt record in {shard_path}:{i + 1}")
-        if rec.get("schema") != SCHEMA_VERSION:
+        if rec.get("schema") not in COMPAT_SCHEMA_VERSIONS:
             raise StoreSchemaError(
                 f"{shard_path}:{i + 1} has schema {rec.get('schema')!r}; "
-                f"this build reads schema {SCHEMA_VERSION}")
+                f"this build reads schemas {COMPAT_SCHEMA_VERSIONS}")
         records.append(rec)
         rows.append((start, length))
     return index_records(records, stamp, rows)

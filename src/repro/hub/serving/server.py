@@ -388,8 +388,9 @@ class HubServer:
         requests here (queue -> batched tune -> registry write; the hub's
         device locks + in-flight dedup collapse concurrent identical
         requests into one job); monitoring clients hit the same socket
-        with `metrics` (the merged reader+writer exposition) and `health`
-        (liveness + respawn payload from the heartbeat watchdog)."""
+        with `metrics` (the merged reader+writer exposition), `health`
+        (liveness + respawn payload from the heartbeat watchdog), and
+        `explain` (one winner's transfer provenance + registry entry)."""
         with client:
             while True:
                 try:
@@ -404,6 +405,21 @@ class HubServer:
                         reply = self._metrics_reply()
                     elif op == "health":
                         reply = self._health_reply()
+                    elif op == "explain":
+                        # introspection: the provenance + registry story
+                        # behind one served winner. Task is the raw
+                        # workload-key string (no Workload on the wire).
+                        record = None
+                        if hasattr(self.hub, "explain"):
+                            record = self.hub.explain(req.get("device", ""),
+                                                      req.get("task", ""))
+                        if record is None:
+                            reply = {"ok": False,
+                                     "error": "no provenance for "
+                                     f"({req.get('device')!r}, "
+                                     f"{req.get('task')!r})"}
+                        else:
+                            reply = {"ok": True, **record}
                     elif op != "tune":
                         reply = {"ok": False,
                                  "error": f"writer got {op!r}"}

@@ -8,6 +8,7 @@ record pools away per run; this store accumulates them instead:
   <root>/records/<device>/<task-shard>.jsonl    one JSON record per line
   <root>/fingerprints.json                      device -> probe vector
   <root>/params/<device>.npz                    pretrained cost-model params
+  <root>/provenance/<device>.jsonl              TransferProvenance per winner
 
 Shards are keyed by (device, task): a tuning job touches one device and a
 handful of tasks, so writes stay local and a reader can load exactly the
@@ -16,7 +17,9 @@ devices/tasks it needs. Writes are atomic (full-shard rewrite to a temp file
 Records are deduplicated on (task, config knobs, trial) — re-measuring the
 same point is a no-op. Every record carries `schema`; loading a record with
 an unknown schema version raises `StoreSchemaError` rather than silently
-misinterpreting it.
+misinterpreting it, while any version in `COMPAT_SCHEMA_VERSIONS` still
+loads (v1 stores predate transfer provenance but read, index, and compact
+exactly as before — writes always stamp the current version).
 """
 from __future__ import annotations
 
@@ -36,7 +39,11 @@ if TYPE_CHECKING:       # the featurized-Records type only; the cost-model
     from repro.core.cost_model import Records     # module itself (and jax)
     # loads lazily so read-only serving processes boot without it
 
-SCHEMA_VERSION = 1
+# v2 added transfer-provenance records (provenance/<device>.jsonl); the
+# record/fingerprint/lineage shapes are unchanged, so v1 stores stay
+# readable — bump COMPAT only when a version truly cannot be interpreted
+SCHEMA_VERSION = 2
+COMPAT_SCHEMA_VERSIONS = (1, 2)
 
 
 class StoreSchemaError(ValueError):
@@ -100,10 +107,10 @@ def _load_shard_file(path: str) -> List[Dict[str, Any]]:
             if i == len(lines) - 1:
                 continue
             raise StoreSchemaError(f"corrupt record in {path}:{i + 1}")
-        if rec.get("schema") != SCHEMA_VERSION:
+        if rec.get("schema") not in COMPAT_SCHEMA_VERSIONS:
             raise StoreSchemaError(
                 f"{path}:{i + 1} has schema {rec.get('schema')!r}; this "
-                f"build reads schema {SCHEMA_VERSION}")
+                f"build reads schemas {COMPAT_SCHEMA_VERSIONS}")
         out.append(rec)
     return out
 
@@ -443,7 +450,7 @@ class RecordStore:
             return {}
         with open(path) as f:
             data = json.load(f)
-        if data.get("schema") != SCHEMA_VERSION:
+        if data.get("schema") not in COMPAT_SCHEMA_VERSIONS:
             raise StoreSchemaError(f"{path} has schema {data.get('schema')!r}")
         if data.get("probe_version") != PROBE_VERSION:
             return {}
@@ -467,6 +474,64 @@ class RecordStore:
 
     def get_fingerprint(self, device: str) -> Optional[np.ndarray]:
         return self.fingerprints().get(device)
+
+    # --- transfer provenance ----------------------------------------------
+    # One JSONL file per device under provenance/; append-only, newest
+    # record per task wins on read. Added in schema v2 — a v1 store simply
+    # has no provenance/ directory, which reads as "no provenance".
+    def _provenance_path(self, device: str) -> str:
+        return os.path.join(self.root, "provenance", _shard_name(device))
+
+    def put_provenance(self, device: str, prov: Dict[str, Any]) -> None:
+        """Append one winner's `TransferProvenance` dict (see
+        hub/provenance.py). The record is stamped with the store schema;
+        `prov["task"]` is the workload key the read side groups by."""
+        rec = dict(prov)
+        rec["schema"] = SCHEMA_VERSION
+        rec.setdefault("device", device)
+        path = self._provenance_path(device)
+        with self._lock:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "a") as f:
+                f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+    def get_provenance(self, device: str, task_key: Optional[str] = None):
+        """Provenance for `device`: a {task_key: record} dict (newest record
+        per task wins), or the single newest record for `task_key` (None if
+        that task has no provenance). Tolerates a torn trailing line, like
+        the shard reader; unknown schemas are hard errors."""
+        path = self._provenance_path(device)
+        if not os.path.exists(path):
+            return None if task_key is not None else {}
+        with open(path) as f:
+            lines = f.read().splitlines()
+        by_task: Dict[str, Dict[str, Any]] = {}
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    continue
+                raise StoreSchemaError(f"corrupt record in {path}:{i + 1}")
+            if rec.get("schema") not in COMPAT_SCHEMA_VERSIONS:
+                raise StoreSchemaError(
+                    f"{path}:{i + 1} has schema {rec.get('schema')!r}; this "
+                    f"build reads schemas {COMPAT_SCHEMA_VERSIONS}")
+            if rec.get("task"):
+                by_task[rec["task"]] = rec
+        if task_key is not None:
+            return by_task.get(task_key)
+        return by_task
+
+    def provenance_devices(self) -> List[str]:
+        """Devices that have at least one provenance record on disk."""
+        pdir = os.path.join(self.root, "provenance")
+        if not os.path.isdir(pdir):
+            return []
+        return sorted(f[:-len(".jsonl")] for f in os.listdir(pdir)
+                      if f.endswith(".jsonl"))
 
     # --- maintenance ------------------------------------------------------
     def compact(self, device: Optional[str] = None) -> int:
@@ -546,7 +611,7 @@ class RecordStore:
         if os.path.exists(path):
             with open(path) as f:
                 data = json.load(f)
-            if data.get("schema") != SCHEMA_VERSION:
+            if data.get("schema") not in COMPAT_SCHEMA_VERSIONS:
                 raise StoreSchemaError(
                     f"{path} has schema {data.get('schema')!r}")
             entries = list(data.get("versions", []))

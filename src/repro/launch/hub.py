@@ -99,6 +99,27 @@ def run_smoke(root: str, refresh: bool = False) -> int:
     assert hub.store.get_fingerprint(target) is not None, (
         "target fingerprint was not persisted")
 
+    # introspection invariant: every winner tuned THIS run is fully
+    # explainable — provenance + calibration evidence, zero misses. (A warm
+    # root skips: its cached winners were tuned by an earlier process whose
+    # store may predate provenance.)
+    if not r1.cache_hit:
+        keys = hub.registry.task_keys(target)
+        assert keys, "tuned run landed no registry winners"
+        for key in keys:
+            exp = hub.explain(target, key)
+            assert exp is not None, f"no explain record for {target}|{key}"
+            prov = exp["provenance"]
+            assert prov.get("sources"), (
+                f"{key}: provenance lost its transfer sources")
+            assert prov.get("calibration"), (
+                f"{key}: winner carries no calibration evidence")
+            assert exp["registry"] is not None and \
+                prov["knobs"] == exp["registry"]["knobs"], (
+                f"{key}: provenance knobs diverge from the served winner")
+        print(f"[hub-smoke] explain: {len(keys)} winner(s) fully "
+              f"explainable (provenance + calibration, zero misses)")
+
     if refresh:
         rc = run_refresh_smoke(hub, target)
         if rc:
@@ -189,6 +210,16 @@ def run_serve_smoke(root: str, readers: int = 2) -> int:
                 f"got {r2.source!r}")
             assert r2.config.knobs == r1.config.knobs, (
                 "cache hit served different knobs than the tuned winner")
+            if r1.source == "tuned":
+                # the RPC introspection path: a freshly tuned winner must
+                # be explainable over the writer socket
+                exp = c.explain(target, wl.key())
+                assert exp.get("provenance", {}).get("calibration"), (
+                    "explain op returned no calibration evidence for a "
+                    "winner tuned this run")
+                print(f"[serve-smoke] explain({target}, {wl.key()}): "
+                      f"{len(exp['provenance'].get('sources', []))} "
+                      f"source(s), calibration present")
         # a client on ANOTHER reader: fresh LRU, must still see the same
         # winner via the shared registry file
         with HubClient(root=root, offset=1) as c2:

@@ -25,11 +25,19 @@ On top of those, the always-on monitoring layer for long-running serving:
     de-flapped alert transitions into the logger (and thus any active
     recorder).
 
+Turned inward on the learned components (search introspection):
+
+  * `repro.obs.calibration` — `CalibrationTracker` streams
+    predicted-vs-measured residuals, rolling pairwise rank accuracy,
+    top-k regret, and draft-acceptance per (device, task) into the same
+    registry, as the cost model and speculative draft are used.
+
 Plus `get_logger` (obs.logging): the structured `[name] msg key=value`
 status logger that replaced the stack's ad-hoc prints
 (`REPRO_LOG_LEVEL`-controlled, quiet under pytest; `REPRO_LOG_JSON=1`
 switches stderr to one-JSON-object-per-line with identical fields).
 """
+from repro.obs.calibration import CalibrationTracker
 from repro.obs.logging import get_logger
 from repro.obs.metrics import (Counter, Gauge, Histogram, LatencyWindow,
                                MetricsRegistry)
@@ -44,6 +52,7 @@ from repro.obs.trace import (SpanContext, Tracer, current_context,
 from repro.obs import metrics, trace
 
 __all__ = [
+    "CalibrationTracker",
     "Counter", "Gauge", "Histogram", "LatencyWindow", "MetricsRegistry",
     "FlightRecorder", "summarize_trace", "SpanContext", "Tracer",
     "current_context", "remote_event", "span", "to_chrome_trace",

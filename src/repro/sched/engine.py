@@ -42,6 +42,7 @@ from repro.core.cost_model import CostModel
 from repro.core.features import FeatureCache
 from repro.core.cost_model import RecordsBuilder
 from repro.obs import trace as obs_trace
+from repro.obs.calibration import CalibrationTracker
 from repro.sched.executor import MeasurementExecutor, batch_wall_seconds
 from repro.sched.speculative import SpeculativeScorer
 
@@ -75,7 +76,8 @@ class TaskTuner:
                  executor: MeasurementExecutor,
                  scorer: Optional[SpeculativeScorer] = None,
                  shared_builder: Optional[RecordsBuilder] = None,
-                 group: int = 0):
+                 group: int = 0,
+                 calibration: Optional[CalibrationTracker] = None):
         self.wl = wl
         self.device = device
         self.strategy = strategy
@@ -83,6 +85,10 @@ class TaskTuner:
         self.cost_model = cost_model
         self.executor = executor
         self.scorer = scorer
+        # pure observer: records predicted-vs-measured calibration per
+        # round; never touches the RNG or strategy state, so enabling it
+        # changes no tuning result (regression-tested)
+        self.calibration = calibration
         # multi-task model sharing: when several tasks on one device share a
         # Strategy instance, they also share `shared_builder` — every task's
         # records land there under its own `group` id, so the shared model's
@@ -148,6 +154,9 @@ class TaskTuner:
         assert self.active, "step() on an inactive task"
         bsz = batch_size if batch_size is not None else self.cfg.top_k_measure
         prev_latency = self.best_latency
+        # the params that score THIS round's search; on_round replaces them
+        # below, so calibration must predict with the pre-update snapshot
+        params_for_round = self.strategy.params
         with obs_trace.span("round.search", device=self.device,
                             task=self.wl.key()):
             cands = evolutionary_search(
@@ -170,6 +179,7 @@ class TaskTuner:
                                                    self.device,
                                                    trial=self.rounds)
         ok_feats = []
+        ok_thrs: List[float] = []
         failed = 0
         for out, f in zip(outcomes, feats):
             if not out.ok:
@@ -184,9 +194,19 @@ class TaskTuner:
             if self.shared_builder is not None:
                 self.shared_builder.append(f, thr, group=self.group)
             ok_feats.append(f)
+            ok_thrs.append(thr)
             if thr > self.best_thr:
                 self.best_thr = thr
             self.traj.append(self.best_thr)
+        if (self.calibration is not None and ok_feats
+                and params_for_round is not None):
+            # cold-start rounds (random scores, no params) carry no model
+            # signal; batched_predict is pure, so this observes without
+            # perturbing the search
+            preds = self.cost_model.batched_predict(params_for_round,
+                                                    np.stack(ok_feats))
+            self.calibration.observe_round(self.device, self.wl.key(),
+                                           self.rounds, preds, ok_thrs)
         costs = [out.seconds for out in outcomes]
         measure_seconds = sum(costs)
         wall = batch_wall_seconds(costs, self.executor.workers)

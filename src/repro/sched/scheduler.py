@@ -39,6 +39,7 @@ from repro.core.cost_model import CostModel, Records, resolve_cost_model
 from repro.obs import FlightRecorder
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.obs.calibration import CalibrationTracker
 from repro.sched.engine import TaskTuner
 from repro.sched.executor import MeasurementExecutor, resolve_executor
 from repro.sched.speculative import (RandomFeatureDraft, SpecStats,
@@ -166,6 +167,7 @@ def run_campaign(
     seed_fn=None,
     share_model: bool = True,
     obs: Union[FlightRecorder, str, None] = None,
+    calibration: Union[CalibrationTracker, bool, None] = None,
 ) -> CampaignResult:
     """Run one scheduled tuning campaign over `jobs` = [(device, tasks)].
 
@@ -191,6 +193,13 @@ def run_campaign(
     stopped here). The result's `obs_summary` then carries the wall-time
     attribution; tracing off (`obs=None`) costs one global read per span
     site.
+
+    `calibration` controls search introspection (obs/calibration.py): the
+    default (None) creates a tracker, a `CalibrationTracker` instance is
+    used as-is (the hub passes its own so provenance records can read the
+    per-task summaries), and False disables tracking entirely. The tracker
+    is a pure observer — on or off, tuning results are bit-for-bit
+    identical (regression-tested).
     """
     from repro.autotune.session import derive_job_seed
 
@@ -217,6 +226,12 @@ def run_campaign(
     # or None (default thread pool); owned pools are shut down on exit
     executor, own_executor = resolve_executor(executor, workers=4)
     spec_stats = SpecStats() if speculative else None
+    if calibration is False:
+        calib: Optional[CalibrationTracker] = None
+    elif calibration is None or calibration is True:
+        calib = CalibrationTracker()
+    else:
+        calib = calibration
     campaign_span = obs_trace.span(
         "campaign", strategy=strat_label, devices=len(list(jobs)),
         tasks=sum(len(ts) for _, ts in jobs))
@@ -294,13 +309,21 @@ def run_campaign(
                     if builder is not None:
                         draft = shared_drafts.setdefault(
                             device, RandomFeatureDraft())
+                    observer = None
+                    if calib is not None:
+                        # bind (device, task) now: the shared SpecStats
+                        # cannot attribute acceptance per task, the
+                        # observer can
+                        observer = (lambda acc, _d=device, _k=wl.key():
+                                    calib.observe_acceptance(_d, _k, acc))
                     scorer = SpeculativeScorer(cm, draft=draft,
                                                keep_frac=keep_frac,
-                                               stats=spec_stats)
+                                               stats=spec_stats,
+                                               observer=observer)
                 units.append(_Unit(len(units), TaskTuner(
                     wl, device, strat, moses_cfg, cm, task_seed, executor,
                     scorer=scorer, shared_builder=builder,
-                    group=len(units))))
+                    group=len(units), calibration=calib)))
 
         # --- the grant loop ---------------------------------------------
         per_round = (sched.round_trials if sched.round_trials is not None
@@ -385,6 +408,8 @@ def run_campaign(
         campaign_span.__exit__(*exc)
         if recorder is not None:
             if exc[0] is None:
+                if calib is not None and len(calib):
+                    recorder.event("calibration", summary=calib.summary())
                 recorder.event("campaign_result",
                                spent_seconds=round(spent, 6),
                                measured_seconds=round(measured_s, 6),
@@ -394,10 +419,18 @@ def run_campaign(
             if started_recorder:
                 recorder.stop()
 
+    # the final adapted model params per device (the provenance layer's
+    # ticket-overlap input); with share_model all of a device's units hold
+    # the same Strategy, without it the last task's instance stands in
+    dev_params: Dict[str, Any] = {}
+    for u in units:
+        if u.tuner.strategy.params is not None:
+            dev_params[u.tuner.device] = u.tuner.strategy.params
     results = []
     for device, tasks in order:
         trs = [by_key[(device, wl.key())] for wl in tasks]
         results.append(TuneResult(strat_label, device, trs,
-                                  sum(t.search_seconds for t in trs)))
+                                  sum(t.search_seconds for t in trs),
+                                  final_params=dev_params.get(device)))
     return CampaignResult(results, trace, spent, measured_s, wall,
                           measurements, spec_stats, obs_summary=obs_summary)

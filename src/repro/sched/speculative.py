@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
@@ -199,7 +199,8 @@ class SpeculativeScorer:
                  keep_frac: float = 0.35, min_full: int = 16,
                  verify_top: int = 8, distill: bool = True,
                  audit: int = 8, seed: int = 0,
-                 stats: Optional[SpecStats] = None):
+                 stats: Optional[SpecStats] = None,
+                 observer: Optional[Callable[[float], None]] = None):
         assert 0.0 < keep_frac <= 1.0
         self.cost_model = cost_model
         self.draft = draft if draft is not None else RandomFeatureDraft()
@@ -207,6 +208,11 @@ class SpeculativeScorer:
         self.min_full = min_full
         self.verify_top = verify_top
         self.distill = distill
+        # acceptance observer (e.g. CalibrationTracker.observe_acceptance
+        # bound to this scorer's task): called with each screened batch's
+        # top-m agreement. Shared `stats` aggregate across a whole device;
+        # the observer is what keeps per-task attribution.
+        self.observer = observer
         # audit rows: a few RANDOM draft-rejected rows are full-scored each
         # screened batch. Without them distillation only ever receives
         # teacher feedback on rows the draft itself promoted — a feedback
@@ -256,9 +262,11 @@ class SpeculativeScorer:
             # draft's global top-m vs the verifier's top-m of the kept slice
             full_top = set(top[np.argsort(-full_scores, kind="stable")[:m]]
                            .tolist())
-            self.stats.acceptance_sum += (
-                len(full_top.intersection(order[:m].tolist())) / m)
+            acc = len(full_top.intersection(order[:m].tolist())) / m
+            self.stats.acceptance_sum += acc
             self.stats.acceptance_n += 1
+            if self.observer is not None:
+                self.observer(acc)
 
         out = np.empty(n, np.float32)
         out[top] = full_scores

@@ -1,0 +1,147 @@
+"""Search-introspection calibration: the streaming tracker's math, its
+metrics exports, and the pure-observer guarantee — enabling calibration
+tracking changes no tuning result bit-for-bit.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.autotune.space import Workload
+from repro.configs.moses import DEFAULT as MCFG
+from repro.obs import metrics as obs_metrics
+from repro.obs.calibration import CalibrationTracker, pair_concordance
+from repro.sched import run_campaign
+
+TINY_CFG = dataclasses.replace(
+    MCFG, online_epochs=2, adaptation_epochs=2, population_size=32,
+    evolution_rounds=2, top_k_measure=8)
+
+JOBS = [("tpu_v5e", [Workload("matmul", (256, 256, 128), name="a"),
+                     Workload("scan", (1024, 512), name="s")])]
+
+
+class TestPairConcordance:
+    def test_perfect_and_reversed_order(self):
+        pred = np.array([1.0, 2.0, 3.0])
+        meas = np.array([10.0, 20.0, 30.0])
+        assert pair_concordance(pred, meas) == (3.0, 3)
+        assert pair_concordance(-pred, meas) == (0.0, 3)
+
+    def test_measured_ties_carry_no_signal(self):
+        # the (0,1) measured pair is tied: only 2 rankable pairs remain
+        conc, total = pair_concordance(np.array([1.0, 2.0, 3.0]),
+                                       np.array([5.0, 5.0, 9.0]))
+        assert total == 2
+        assert conc == 2.0
+
+    def test_predicted_ties_get_half_credit(self):
+        conc, total = pair_concordance(np.array([1.0, 1.0]),
+                                       np.array([5.0, 9.0]))
+        assert (conc, total) == (0.5, 1)
+
+
+class TestTracker:
+    def test_observe_round_updates_state_and_metrics(self):
+        reg = obs_metrics.MetricsRegistry()
+        tr = CalibrationTracker(registry=reg, top_k=2)
+        rec = tr.observe_round("tpu_v5e", "matmul:256x256x128", 0,
+                               predicted=[0.1, 0.9, 0.5],
+                               measured=[10.0, 30.0, 20.0])
+        assert rec["topk_hit"] is True          # argmax(meas)=1 in top-2
+        assert rec["regret"] == pytest.approx(0.0)
+        assert rec["rank_accuracy"] == pytest.approx(1.0)
+
+        d = tr.per_task("tpu_v5e", "matmul:256x256x128")
+        assert d["rounds"] == 1 and d["n_points"] == 3
+        assert d["rank_accuracy"] == pytest.approx(1.0)
+        assert d["topk_hits"] == 1 and d["topk_misses"] == 0
+        assert d["mean_topk_regret"] == pytest.approx(0.0)
+        assert d["draft_acceptance"] is None    # no screened batches yet
+
+        snap = reg.snapshot()
+        assert snap["counters"][
+            "calib.topk{device=tpu_v5e,result=hit,task=matmul:256x256x128}"
+        ] == 1
+        assert snap["gauges"][
+            "calib.rank_accuracy{device=tpu_v5e,task=matmul:256x256x128}"
+        ] == pytest.approx(1.0)
+        assert snap["histograms"][
+            "calib.residual{device=tpu_v5e,task=matmul:256x256x128}"
+        ]["count"] == 3
+
+    def test_topk_miss_records_regret(self):
+        reg = obs_metrics.MetricsRegistry()
+        tr = CalibrationTracker(registry=reg, top_k=1)
+        # model's argmax is index 0 (meas 10), measured best is 40
+        rec = tr.observe_round("d", "t", 0, [0.9, 0.1, 0.2],
+                               [10.0, 40.0, 20.0])
+        assert rec["topk_hit"] is False
+        assert rec["regret"] == pytest.approx((40.0 - 10.0) / 40.0)
+        d = tr.per_task("d", "t")
+        assert d["topk_misses"] == 1
+        assert d["mean_topk_regret"] == pytest.approx(0.75)
+
+    def test_degenerate_batches_skipped(self):
+        tr = CalibrationTracker(registry=obs_metrics.MetricsRegistry())
+        assert tr.observe_round("d", "t", 0, [], []) is None
+        assert tr.observe_round("d", "t", 0, [1.0], [1.0, 2.0]) is None
+        assert len(tr) == 0
+
+    def test_acceptance_rolls_and_skips_nan(self):
+        reg = obs_metrics.MetricsRegistry()
+        tr = CalibrationTracker(registry=reg)
+        tr.observe_acceptance("d", "t", 1.0)
+        tr.observe_acceptance("d", "t", float("nan"))   # ignored
+        tr.observe_acceptance("d", "t", 0.5)
+        d = tr.per_task("d", "t")
+        assert d["draft_batches"] == 2
+        assert d["draft_acceptance"] == pytest.approx(0.75)
+        assert reg.snapshot()["gauges"][
+            "calib.acceptance{device=d,task=t}"] == pytest.approx(0.75)
+
+    def test_label_values_sanitized(self):
+        """Hostile device/task strings must not break the `name{k=v}`
+        exposition format."""
+        reg = obs_metrics.MetricsRegistry()
+        tr = CalibrationTracker(registry=reg)
+        tr.observe_round("dev{x=1},bad", "task\nnewline", 0,
+                         [0.1, 0.9], [1.0, 2.0])
+        for key in reg.snapshot()["counters"]:
+            name, labels = obs_metrics.parse_key(key)
+            assert "\n" not in key
+            assert dict(labels)["device"] == "dev_x_1__bad"
+
+    def test_summary_keyed_device_task(self):
+        tr = CalibrationTracker(registry=obs_metrics.MetricsRegistry())
+        tr.observe_round("d1", "t1", 0, [0.1, 0.9], [1.0, 2.0])
+        tr.observe_round("d2", "t2", 0, [0.1, 0.9], [1.0, 2.0])
+        assert sorted(tr.summary()) == ["d1|t1", "d2|t2"]
+        assert len(tr) == 2
+
+
+class TestPureObserver:
+    def test_campaign_bit_identical_with_and_without(self):
+        """Acceptance: enabling calibration tracking (the default) changes
+        no tuning result bit-for-bit vs calibration=False."""
+        off = run_campaign(JOBS, TINY_CFG, strategy="ansor-random",
+                           trials_per_task=16, speculative=True,
+                           calibration=False)
+        tracker = CalibrationTracker(registry=obs_metrics.MetricsRegistry())
+        on = run_campaign(JOBS, TINY_CFG, strategy="ansor-random",
+                          trials_per_task=16, speculative=True,
+                          calibration=tracker)
+        for r1, r2 in zip(off.results, on.results):
+            for t1, t2 in zip(r1.tasks, r2.tasks):
+                assert t1.best_config.knobs == t2.best_config.knobs
+                assert t1.best_latency == t2.best_latency
+                assert t1.measurements == t2.measurements
+        assert [t.key for t in off.trace] == [t.key for t in on.trace]
+        assert off.total_measurements == on.total_measurements
+        # ...and the observer actually observed
+        assert len(tracker) == len(JOBS[0][1])
+        for key, d in tracker.summary().items():
+            assert d["rounds"] > 0 and d["n_points"] > 0
+        # draft-then-verify acceptance reached the tracker too
+        assert any(d["draft_batches"] > 0
+                   for d in tracker.summary().values())

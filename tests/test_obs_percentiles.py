@@ -1,0 +1,132 @@
+"""Property tests pinning the obs Histogram's nearest-rank percentiles
+against `numpy.percentile` on the raw-sample ring — including the
+ring-overflow (only the newest `window` samples are exact) and
+merged-snapshot (bucket-bound fallback) cases the report/`--stats`
+surfaces depend on.
+
+Convention under test: nearest-rank = `sorted(xs)[ceil(p/100 * n) - 1]`
+(clamped), which is numpy's ``method="inverted_cdf"``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import (BUCKET_BOUNDS, Histogram, MetricsRegistry,
+                               hist_percentile)
+from tests._hypothesis_support import given, settings, st
+
+# stay inside the shared bucket grid (1e-7 .. 1e4) so bucket-bound
+# fallbacks are well defined; values are latencies/seconds in practice
+SAMPLES = st.lists(st.floats(min_value=1e-6, max_value=1e3,
+                             allow_nan=False, allow_infinity=False),
+                   min_size=1, max_size=200)
+PCT = st.floats(min_value=0.1, max_value=100.0)
+
+BUCKET_RATIO = 10.0 ** (1.0 / 8.0)          # one grid step
+
+
+def nearest_rank(xs, p):
+    return float(np.percentile(np.asarray(xs, dtype=float), p,
+                               method="inverted_cdf"))
+
+
+class TestRingCovered:
+    @given(SAMPLES, PCT)
+    @settings(max_examples=60, deadline=None)
+    def test_matches_numpy_inverted_cdf(self, xs, p):
+        h = Histogram()
+        for x in xs:
+            h.observe(x)
+        assert h.percentile(p) == nearest_rank(xs, p)
+
+    @given(SAMPLES)
+    @settings(max_examples=30, deadline=None)
+    def test_extremes_are_min_and_max(self, xs):
+        h = Histogram()
+        for x in xs:
+            h.observe(x)
+        assert h.percentile(0) == min(xs)
+        assert h.percentile(100) == max(xs)
+
+    def test_empty_is_nan(self):
+        assert math.isnan(Histogram().percentile(50))
+
+
+class TestRingOverflow:
+    @given(st.lists(st.floats(min_value=1e-6, max_value=1e3,
+                              allow_nan=False, allow_infinity=False),
+                    min_size=33, max_size=120), PCT)
+    @settings(max_examples=40, deadline=None)
+    def test_exact_over_newest_window(self, xs, p):
+        """Once the ring wraps, percentiles are exact nearest-rank over the
+        newest `window` samples (the LatencyWindow contract)."""
+        h = Histogram(window=32)
+        for x in xs:
+            h.observe(x)
+        assert h.count == len(xs) and len(h) == 32
+        assert h.percentile(p) == nearest_rank(xs[-32:], p)
+
+
+class TestMergedSnapshot:
+    @given(SAMPLES, SAMPLES, PCT)
+    @settings(max_examples=40, deadline=None)
+    def test_merge_covering_ring_stays_exact(self, a_xs, b_xs, p):
+        """Merging two snapshots whose rings jointly cover every sample
+        keeps nearest-rank exact over the union."""
+        a, b = Histogram(), Histogram()
+        for x in a_xs:
+            a.observe(x)
+        for x in b_xs:
+            b.observe(x)
+        merged = Histogram()
+        merged.merge_state(a.state())
+        merged.merge_state(b.state())
+        assert merged.percentile(p) == nearest_rank(a_xs + b_xs, p)
+
+    @given(st.lists(st.floats(min_value=1e-6, max_value=1e3,
+                              allow_nan=False, allow_infinity=False),
+                    min_size=17, max_size=80), PCT)
+    @settings(max_examples=40, deadline=None)
+    def test_uncovered_merge_bounded_by_one_bucket(self, xs, p):
+        """A merged snapshot whose ring no longer covers the count falls
+        back to bucket upper bounds: the answer brackets the true
+        nearest-rank value within one grid step, clamped to [min, max]."""
+        wrapped = Histogram(window=16)           # ring loses the oldest
+        for x in xs:
+            wrapped.observe(x)
+        merged = Histogram()
+        merged.merge_state(wrapped.state())
+        assert merged.count == len(xs) and len(merged) == 16
+        got = merged.percentile(p)
+        exact = nearest_rank(xs, p)
+        assert min(xs) <= got <= max(xs)
+        assert exact <= got <= min(max(xs), exact * BUCKET_RATIO * (1 + 1e-9))
+
+    @given(SAMPLES, PCT)
+    @settings(max_examples=40, deadline=None)
+    def test_hist_percentile_on_snapshot_state(self, xs, p):
+        """`hist_percentile` (the benchmark/report path: percentiles off a
+        registry snapshot delta) agrees with the live histogram."""
+        reg = MetricsRegistry()
+        h = reg.histogram("t.lat")
+        for x in xs:
+            h.observe(x)
+        state = reg.snapshot()["histograms"]["t.lat"]
+        assert hist_percentile(state, p) == nearest_rank(xs, p)
+
+    def test_bucket_walk_lands_on_upper_bound(self):
+        """Deterministic pin of the fallback: a windowless state's
+        percentile is the upper bound of the rank sample's bucket, clamped
+        to the observed [min, max]."""
+        h = Histogram()
+        h.observe(0.05)
+        h.observe(0.07)
+        state = h.state()
+        state["window"] = []                     # snapshot shed its ring
+        merged = Histogram()
+        merged.merge_state(state)
+        got = merged.percentile(50)              # rank 1 -> the 0.05 sample
+        bound = next(b for b in BUCKET_BOUNDS if b >= 0.05)
+        assert got == pytest.approx(min(0.07, bound))
+        assert 0.05 <= got <= 0.05 * BUCKET_RATIO

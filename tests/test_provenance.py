@@ -1,0 +1,245 @@
+"""Transfer provenance: record round-trips, lottery-ticket overlap, store
+persistence, the hub `explain` join — and the schema back-compat
+regression: schema-1 stores (written before the v2 provenance bump) must
+still load, index, and compact cleanly.
+"""
+import dataclasses
+import json
+import os
+import types
+
+import numpy as np
+import pytest
+
+from repro.autotune.space import ProgramConfig, Workload, default_config
+from repro.configs.moses import DEFAULT as MCFG
+from repro.hub import (RecordStore, StoreSchemaError, TuningHub,
+                       TransferProvenance, bootstrap_store, build_provenance,
+                       ticket_overlap)
+from repro.hub.fingerprint import PROBE_VERSION
+from repro.hub.provenance import source_attribution
+from repro.hub.store import COMPAT_SCHEMA_VERSIONS, SCHEMA_VERSION
+
+WL_A = Workload("matmul", (256, 256, 128), name="a")
+WL_B = Workload("matmul", (512, 256, 128), name="b")
+CFG_A = default_config(WL_A)
+
+TINY_CFG = dataclasses.replace(
+    MCFG, online_epochs=2, adaptation_epochs=2, population_size=32,
+    evolution_rounds=2, top_k_measure=8)
+
+
+def _prov(task="matmul:256x256x128", gflops=100.0, **over):
+    base = dict(
+        device="tpu_v5e_pro", task=task, knobs={"block_m": 64},
+        throughput_gflops=gflops, strategy="moses",
+        sources=[{"device": "tpu_v5e", "similarity": 0.99, "weight": 0.9}],
+        params_device="tpu_v5e", params_version=1,
+        lineage=[{"version": 1, "trigger": "pretrain"}],
+        mask_overlap=0.875, measurements=16, search_seconds=4.4,
+        poisoned=0, trials_per_task=16,
+        calibration={"rounds": 2, "rank_accuracy": 0.8})
+    base.update(over)
+    return TransferProvenance(**base)
+
+
+class TestRecord:
+    def test_round_trip(self):
+        p = _prov()
+        again = TransferProvenance.from_dict(
+            json.loads(json.dumps(p.to_dict())))
+        assert again == dataclasses.replace(p,
+                                            created_at=again.created_at)
+        assert again.created_at > 0
+
+    def test_from_dict_tolerates_future_and_missing_fields(self):
+        d = {"device": "d", "task": "t", "knobs": {"block_m": 64},
+             "from_the_future": {"x": 1}}
+        p = TransferProvenance.from_dict(d)
+        assert p.device == "d" and p.sources == []
+        assert p.params_version is None and p.calibration is None
+        assert p.measurements == 0
+
+    def test_source_attribution_joins_similarity_and_weight(self):
+        sel = types.SimpleNamespace(
+            ranked=[("a", 0.9), ("b", 0.5), ("c", 0.1)],
+            sources=[("a", 0.75), ("b", 0.25)])
+        out = source_attribution(sel)
+        assert out == [
+            {"device": "a", "similarity": 0.9, "weight": 0.75},
+            {"device": "b", "similarity": 0.5, "weight": 0.25}]
+
+    def test_build_provenance_from_task_result(self):
+        tr = types.SimpleNamespace(
+            workload=WL_A, best_config=CFG_A, best_throughput=123.456,
+            measurements=8, search_seconds=2.2, poisoned=["x", "y"])
+        p = build_provenance(tr, "dev", "moses", trials_per_task=16)
+        assert p.task == WL_A.key()
+        assert p.knobs == {k: int(v) for k, v in dict(CFG_A.knobs).items()}
+        assert p.poisoned == 2 and p.sources == []
+
+
+class TestTicketOverlap:
+    def _params(self, seed=0):
+        rng = np.random.RandomState(seed)
+        return {"w0": rng.randn(8, 4).astype(np.float32),
+                "b0": rng.randn(4).astype(np.float32)}
+
+    def test_overlap_in_unit_interval(self):
+        src = self._params(0)
+        fin = {k: v + 0.01 * np.sign(v) for k, v in src.items()}
+        ov = ticket_overlap(src, fin, ratio=0.5)
+        assert ov is not None and 0.0 <= ov <= 1.0
+
+    def test_none_when_missing_or_incomparable(self):
+        p = self._params(0)
+        assert ticket_overlap(None, p) is None
+        assert ticket_overlap(p, None) is None
+        # different tree structure -> not comparable, not an exception
+        assert ticket_overlap(p, {"other": np.ones(3)}) is None
+
+
+class TestStoreProvenance:
+    def test_put_get_newest_wins(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        store.put_provenance("tpu_v5e_pro", _prov(gflops=100.0).to_dict())
+        store.put_provenance("tpu_v5e_pro", _prov(gflops=200.0).to_dict())
+        store.put_provenance("tpu_v5e_pro",
+                             _prov(task=WL_B.key(), gflops=50.0).to_dict())
+        rec = store.get_provenance("tpu_v5e_pro", WL_A.key())
+        assert rec["throughput_gflops"] == 200.0
+        assert rec["schema"] == SCHEMA_VERSION
+        by_task = store.get_provenance("tpu_v5e_pro")
+        assert sorted(by_task) == sorted([WL_A.key(), WL_B.key()])
+        # survives a fresh instance; device listing sees it
+        again = RecordStore(str(tmp_path / "s"))
+        assert again.get_provenance("tpu_v5e_pro", WL_B.key()) is not None
+        assert again.provenance_devices() == ["tpu_v5e_pro"]
+
+    def test_absent_and_torn_and_unknown_schema(self, tmp_path):
+        store = RecordStore(str(tmp_path / "s"))
+        assert store.get_provenance("nope") == {}
+        assert store.get_provenance("nope", WL_A.key()) is None
+        store.put_provenance("d", _prov().to_dict())
+        path = os.path.join(store.root, "provenance", "d.jsonl")
+        with open(path, "a") as f:
+            f.write('{"task": "tr')                     # killed writer
+        assert store.get_provenance("d", WL_A.key()) is not None
+        with open(path, "a") as f:
+            f.write("\n" + json.dumps({"schema": SCHEMA_VERSION + 1,
+                                       "task": "x"}) + "\n")
+        with pytest.raises(StoreSchemaError):
+            store.get_provenance("d")
+
+
+class TestSchema1BackCompat:
+    """Regression (satellite): stores written under schema 1 — before the
+    provenance bump to v2 — must load, index, and compact cleanly, and new
+    writes into them stamp the current version without disturbing v1 rows.
+    """
+
+    def _v1_store(self, tmp_path, n_dup=0):
+        root = tmp_path / "s"
+        shard_dir = root / "records" / "tpu_v5e"
+        shard_dir.mkdir(parents=True)
+        rows = []
+        for trial, thr in enumerate([100.0, 80.0, 120.0]):
+            rows.append({
+                "schema": 1, "device": "tpu_v5e",
+                "task": {"kind": WL_A.kind, "dims": list(WL_A.dims),
+                         "name": WL_A.name, "count": WL_A.count,
+                         "dtype_bytes": WL_A.dtype_bytes},
+                "knobs": {k: int(v) for k, v in CFG_A.knobs},
+                "throughput_gflops": thr, "trial": trial})
+        rows += rows[:n_dup]                            # on-disk duplicates
+        shard = shard_dir / "matmul_256x256x128.jsonl"
+        shard.write_text("".join(json.dumps(r) + "\n" for r in rows))
+        (root / "fingerprints.json").write_text(json.dumps(
+            {"schema": 1, "probe_version": PROBE_VERSION,
+             "devices": {"tpu_v5e": [0.1] * 16}}))
+        return str(root)
+
+    def test_v1_loads_indexes_and_serves(self, tmp_path):
+        store = RecordStore(self._v1_store(tmp_path))
+        assert 1 in COMPAT_SCHEMA_VERSIONS          # the contract under test
+        assert store.devices() == ["tpu_v5e"]
+        assert store.count("tpu_v5e") == 3
+        assert store.task_keys("tpu_v5e") == [WL_A.key()]
+        best = store.best_record("tpu_v5e", WL_A.key())
+        assert best["throughput_gflops"] == 120.0
+        recs = store.records("tpu_v5e")
+        assert len(recs) == 3
+        assert store.get_fingerprint("tpu_v5e") is not None
+        # v1 predates provenance: reads as absent, not as an error
+        assert store.get_provenance("tpu_v5e") == {}
+        assert store.provenance_devices() == []
+
+    def test_v1_compacts_cleanly(self, tmp_path):
+        store = RecordStore(self._v1_store(tmp_path, n_dup=2))
+        assert store.count("tpu_v5e") == 5              # raw on-disk rows
+        assert store.compact() == 2                     # duplicates dropped
+        assert RecordStore(store.root).count("tpu_v5e") == 3
+
+    def test_new_writes_stamp_current_schema_alongside_v1(self, tmp_path):
+        store = RecordStore(self._v1_store(tmp_path))
+        assert store.put("tpu_v5e", WL_A, CFG_A, 90.0, trial=7)
+        store.flush()
+        shard = os.path.join(store.root, "records", "tpu_v5e",
+                             "matmul_256x256x128.jsonl")
+        with open(shard) as f:
+            schemas = [json.loads(ln)["schema"] for ln in f if ln.strip()]
+        assert schemas.count(1) == 3
+        assert schemas.count(SCHEMA_VERSION) == 1
+        assert RecordStore(store.root).count("tpu_v5e") == 4
+
+    def test_unknown_schema_still_rejected(self, tmp_path):
+        root = self._v1_store(tmp_path)
+        shard = os.path.join(root, "records", "tpu_v5e",
+                             "matmul_256x256x128.jsonl")
+        with open(shard, "a") as f:
+            f.write(json.dumps({"schema": SCHEMA_VERSION + 1,
+                                "device": "tpu_v5e",
+                                "task": {"kind": "matmul",
+                                         "dims": [256, 256, 128]},
+                                "knobs": {}, "throughput_gflops": 1.0,
+                                "trial": 9}) + "\n")
+        with pytest.raises(StoreSchemaError):
+            list(RecordStore(root).iter_device("tpu_v5e"))
+        with pytest.raises(StoreSchemaError):
+            RecordStore(root)._load_shard_cached(shard)
+
+
+class TestHubExplain:
+    def test_every_winner_explainable(self, tmp_path):
+        """Acceptance: after a tune, `explain` returns a full provenance +
+        calibration record for the winner — sources, warm-start params,
+        budget, and the calibration the model showed while choosing."""
+        hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                        trials_per_task=16, pretrain_epochs=2)
+        bootstrap_store(hub.store, ("tpu_v5e", "tpu_edge"), [WL_A, WL_B],
+                        programs_per_task=8)
+        target = "tpu_v5e_pro"
+        r1 = hub.get_config(target, WL_A)
+        assert not r1.cache_hit
+
+        for task_key in hub.registry.task_keys(target):
+            exp = hub.explain(target, task_key)
+            assert exp is not None
+            prov = exp["provenance"]
+            assert prov["device"] == target and prov["task"] == task_key
+            assert prov["sources"], "no source attribution recorded"
+            assert prov["strategy"] == "moses"
+            assert prov["measurements"] > 0
+            assert prov["calibration"] is not None
+            assert prov["calibration"]["rounds"] > 0
+            assert exp["registry"] is not None
+            assert prov["knobs"] == exp["registry"]["knobs"]
+        # decodes through the dataclass, tolerant path included
+        p = TransferProvenance.from_dict(
+            hub.store.get_provenance(target, WL_A.key()))
+        assert p.throughput_gflops > 0
+
+    def test_explain_unknown_is_none(self, tmp_path):
+        hub = TuningHub(str(tmp_path / "hub"), moses_cfg=TINY_CFG,
+                        trials_per_task=16, pretrain_epochs=2)
+        assert hub.explain("ghost", WL_A.key()) is None
